@@ -1,0 +1,79 @@
+"""Paper Fig 17: KSP-DG (+KSP-DG-Yen, Para-KSP-DG) vs centralized
+Yen / Para-Yen / FindKSP, over #queries and k."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.dtlp import DTLP
+from repro.core.kspdg import ksp_dg
+from repro.core.sssp import graph_view
+from repro.core.yen import ksp
+
+from .common import build_network, emit, rand_queries
+
+
+def bench_vs_baselines(quick=True):
+    g, z = build_network("COL-s", quick)
+    d = DTLP.build(g, z=z, xi=6)
+    view = graph_view(g)
+    rows = []
+    n_q = 8 if quick else 100
+    qs = rand_queries(g, n_q, seed=1)
+    k = 5
+
+    def run_central(mode):
+        t0 = time.perf_counter()
+        for s, t in qs:
+            ksp(view, s, t, k, mode=mode)
+        return time.perf_counter() - t0
+
+    def run_kspdg(partial_mode):
+        t0 = time.perf_counter()
+        for s, t in qs:
+            ksp_dg(d, s, t, k, partial_mode=partial_mode)
+        return time.perf_counter() - t0
+
+    algos = {
+        "Yen": lambda: run_central("yen"),
+        "Para-Yen": lambda: run_central("para_yen"),
+        "FindKSP": lambda: run_central("findksp"),
+        "KSP-DG-Yen": lambda: run_kspdg("yen"),
+        "Para-KSP-DG": lambda: run_kspdg("para_yen"),
+        "KSP-DG(PYen)": lambda: run_kspdg("pyen"),
+    }
+    for name, fn in algos.items():
+        total = fn()
+        rows.append(dict(fig="17", algo=name, n_queries=n_q, k=k,
+                         total_s=round(total, 3),
+                         ms_per_query=round(total / n_q * 1e3, 2)))
+    return emit("baselines", rows)
+
+
+def bench_vs_k(quick=True):
+    g, z = build_network("NY-s", quick)
+    d = DTLP.build(g, z=z, xi=6)
+    view = graph_view(g)
+    rows = []
+    qs = rand_queries(g, 6 if quick else 50, seed=2)
+    for k in [2, 8] if quick else [2, 8, 16, 32]:
+        for name, fn in {
+            "Yen": lambda k=k: [ksp(view, s, t, k) for s, t in qs],
+            "KSP-DG(PYen)": lambda k=k: [ksp_dg(d, s, t, k) for s, t in qs],
+        }.items():
+            t0 = time.perf_counter()
+            fn()
+            rows.append(dict(fig="17e", algo=name, k=k,
+                             ms_per_query=round(
+                                 (time.perf_counter() - t0) / len(qs) * 1e3, 2
+                             )))
+    return emit("baselines_vs_k", rows)
+
+
+def main(quick=True):
+    bench_vs_baselines(quick)
+    bench_vs_k(quick)
+
+
+if __name__ == "__main__":
+    main()

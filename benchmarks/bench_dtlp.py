@@ -1,0 +1,100 @@
+"""Paper Figs 14-15: DTLP construction cost vs z and graph size; MPTree vs
+EBP-II memory; maintenance cost vs graph size / α / ξ; directed variant."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dtlp import DTLP
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+
+from .common import build_network, emit
+
+
+def bench_build_vs_z(quick=True):
+    g, z0 = build_network("NY-s", quick)
+    rows = []
+    for z in ([z0 // 2, z0, z0 * 2] if quick else [z0 // 2, z0, z0 * 2, z0 * 4]):
+        d = DTLP.build(g, z=z, xi=6)
+        s = d.stats
+        rows.append(
+            dict(
+                fig="15a-d", z=z, n=g.n, m=g.m,
+                build_s=round(s.total_s, 3),
+                partition_s=round(s.partition_s, 3),
+                bounding_s=round(s.bounding_s, 3),
+                compact_s=round(s.compact_s, 3),
+                n_subgraphs=d.partition.n_subgraphs,
+                skeleton_v=d.skeleton.n,
+                n_paths=s.n_paths,
+                ebp_slots=s.ebp_slots,
+                mptree_slots=s.mptree_slots,
+                compaction=round(s.ebp_slots / max(1, s.mptree_slots), 2),
+            )
+        )
+    return emit("dtlp_build_vs_z", rows)
+
+
+def bench_build_vs_size(quick=True):
+    rows = []
+    sizes = [(8, 8), (12, 12), (16, 16)] if quick else [(12, 12), (18, 18), (26, 26), (36, 36)]
+    for r, c in sizes:
+        g = grid_road_network(r, c, seed=0)
+        t0 = time.perf_counter()
+        d = DTLP.build(g, z=20, xi=6)
+        build = time.perf_counter() - t0
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=1)
+        eids, new_w = stream.next_batch()
+        maint = d.apply_updates(eids, new_w)
+        rows.append(
+            dict(
+                fig="14a", n=g.n, m=g.m, build_s=round(build, 3),
+                maintain_s=round(maint, 4), updates=len(eids),
+            )
+        )
+    return emit("dtlp_build_vs_size", rows)
+
+
+def bench_maintain(quick=True):
+    rows = []
+    g, z = build_network("NY-s", quick)
+    for xi in [2, 6, 10] if quick else [2, 6, 10, 15, 20]:
+        d = DTLP.build(g, z=z, xi=xi)
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=2)
+        eids, new_w = stream.next_batch()
+        maint = d.apply_updates(eids, new_w)
+        rows.append(dict(fig="14b", xi=xi, alpha=0.5,
+                         maintain_s=round(maint, 4), n_paths=d.stats.n_paths))
+        g.w[:] = g.w0
+    for alpha in [0.1, 0.5, 0.9]:
+        d = DTLP.build(g, z=z, xi=6)
+        stream = WeightUpdateStream(g, alpha=alpha, tau=0.5, seed=3)
+        eids, new_w = stream.next_batch()
+        maint = d.apply_updates(eids, new_w)
+        rows.append(dict(fig="14c", xi=6, alpha=alpha,
+                         maintain_s=round(maint, 4), updates=len(eids)))
+        g.w[:] = g.w0
+    # directed vs undirected (paper: directed costs ~2x)
+    for directed in [False, True]:
+        gd, zd = build_network("NY-s", quick, directed=directed)
+        t0 = time.perf_counter()
+        d = DTLP.build(gd, z=zd, xi=6)
+        build = time.perf_counter() - t0
+        stream = WeightUpdateStream(gd, alpha=0.5, tau=0.5, seed=4)
+        eids, new_w = stream.next_batch()
+        maint = d.apply_updates(eids, new_w)
+        rows.append(dict(fig="14d/15d", directed=directed,
+                         build_s=round(build, 3), maintain_s=round(maint, 4)))
+    return emit("dtlp_maintain", rows)
+
+
+def main(quick=True):
+    bench_build_vs_z(quick)
+    bench_build_vs_size(quick)
+    bench_maintain(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Engine/kernel micro-benchmarks: batched-BF relaxation throughput on
+this host (CPU) + the v5e roofline projection for the same tile shapes
+(the dry-run's cost model, see EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import dense as E
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+from .common import emit
+
+
+def bench_bf_throughput(quick=True):
+    rows = []
+    shapes = [(32, 4, 128), (16, 8, 256)] if quick else [
+        (32, 4, 128), (16, 8, 256), (8, 8, 512), (4, 4, 1024)
+    ]
+    rng = np.random.default_rng(0)
+    for S, J, z in shapes:
+        adj = rng.uniform(1, 50, (S, z, z)).astype(np.float32)
+        adj[rng.random((S, z, z)) > 0.3] = float(E.INF)
+        for s in range(S):
+            np.fill_diagonal(adj[s], 0.0)
+        dist = np.full((S, J, z), float(E.INF), np.float32)
+        dist[:, :, 0] = 0.0
+        adj_j, dist_j = jnp.asarray(adj), jnp.asarray(dist)
+        so = jnp.zeros((S, J, z), bool)
+        step = jax.jit(lambda d: E.bf_step_grouped(d, adj_j, so, so))
+        step(dist_j).block_until_ready()
+        t0 = time.perf_counter()
+        n_it = 10
+        d = dist_j
+        for _ in range(n_it):
+            d = step(d)
+        d.block_until_ready()
+        dt = (time.perf_counter() - t0) / n_it
+        # per-relaxation work: S·J·z² min+add (2 "flops"), streams adj once
+        work = 2.0 * S * J * z * z
+        bytes_ = 4.0 * S * z * z + 3 * 4.0 * S * J * z
+        rows.append(
+            dict(
+                bench="bf_relax", S=S, J=J, z=z,
+                cpu_ms=round(dt * 1e3, 2),
+                cpu_gflops=round(work / dt / 1e9, 2),
+                v5e_memory_bound_us=round(bytes_ / HBM_BW * 1e6, 1),
+                v5e_compute_bound_us=round(work / PEAK_FLOPS * 1e6, 3),
+                note="memory-bound on v5e (VPU min-plus, no MXU)",
+            )
+        )
+    return emit("engine_bf", rows)
+
+
+def bench_kernel_vs_ref(quick=True):
+    """Interpret-mode kernels vs jnp reference (correct + same numerics);
+    CPU timing is NOT meaningful for Pallas interpret, so only parity and
+    the roofline projection are recorded."""
+    from repro.kernels import ops, ref
+
+    rows = []
+    rng = np.random.default_rng(1)
+    for S, J, z in [(2, 4, 128)] if quick else [(2, 4, 128), (2, 8, 256)]:
+        adj = rng.uniform(1, 50, (S, z, z)).astype(np.float32)
+        dist = np.full((S, J, z), float(E.INF), np.float32)
+        dist[:, :, 0] = 0.0
+        got = ops.bf_relax_step(
+            jnp.asarray(dist), jnp.asarray(adj),
+            jnp.zeros((S, J, z)), jnp.zeros((S, J, z)),
+        )
+        want = ref.bf_relax_ref(
+            jnp.asarray(dist), jnp.asarray(adj),
+            jnp.zeros((S, J, z), bool), jnp.zeros((S, J, z), bool),
+            jnp.full((S, J), float(E.INF)),
+        )
+        err = float(jnp.max(jnp.abs(got - want)))
+        rows.append(dict(bench="pallas_parity", S=S, J=J, z=z, max_err=err))
+        assert err == 0.0
+    return emit("engine_kernels", rows)
+
+
+def main(quick=True):
+    bench_bf_throughput(quick)
+    bench_kernel_vs_ref(quick)
+
+
+if __name__ == "__main__":
+    main()

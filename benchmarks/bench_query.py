@@ -1,0 +1,111 @@
+"""Paper Fig 16 + iteration figures: KSP-DG query time vs z / k / #queries
+/ ξ / τ, and iteration counts vs ξ / τ / k / α."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dtlp import DTLP
+from repro.core.kspdg import ksp_dg
+from repro.data.roadnet import WeightUpdateStream
+
+from .common import build_network, emit, rand_queries
+
+
+def _run_queries(d, queries, k):
+    t0 = time.perf_counter()
+    iters = 0
+    for s, t in queries:
+        _, st = ksp_dg(d, s, t, k, return_stats=True)
+        iters += st.iterations
+    return time.perf_counter() - t0, iters / len(queries)
+
+
+def bench_query_vs_z_k(quick=True):
+    g, z0 = build_network("NY-s", quick)
+    rows = []
+    n_q = 12 if quick else 100
+    for z in [z0 // 2, z0, z0 * 2]:
+        d = DTLP.build(g, z=z, xi=6)
+        qs = rand_queries(g, n_q, seed=1)
+        for k in [2, 5] if quick else [2, 5, 10, 20]:
+            total, avg_it = _run_queries(d, qs, k)
+            rows.append(
+                dict(fig="16a-b", z=z, k=k, n_queries=n_q,
+                     total_s=round(total, 3),
+                     ms_per_query=round(total / n_q * 1e3, 2),
+                     avg_iterations=round(avg_it, 2))
+            )
+    return emit("query_vs_z_k", rows)
+
+
+def bench_query_scalability(quick=True):
+    g, z = build_network("NY-s", quick)
+    d = DTLP.build(g, z=z, xi=6)
+    rows = []
+    for n_q in [10, 20, 40] if quick else [50, 100, 200, 400, 1000]:
+        qs = rand_queries(g, n_q, seed=2)
+        total, _ = _run_queries(d, qs, 2)
+        rows.append(dict(fig="16c", n_queries=n_q, total_s=round(total, 3),
+                         ms_per_query=round(total / n_q * 1e3, 2)))
+    return emit("query_scalability", rows)
+
+
+def bench_query_vs_xi_tau(quick=True):
+    g, z = build_network("NY-s", quick)
+    rows = []
+    n_q = 8 if quick else 100
+    for xi in [2, 6, 10]:
+        d = DTLP.build(g, z=z, xi=xi)
+        qs = rand_queries(g, n_q, seed=3)
+        total, avg_it = _run_queries(d, qs, 5)
+        rows.append(dict(fig="16d/iters-xi", xi=xi, tau=0.0, k=5,
+                         ms_per_query=round(total / n_q * 1e3, 2),
+                         avg_iterations=round(avg_it, 2)))
+    for tau in ([0.2, 0.5] if quick else [0.2, 0.5, 0.8]):
+        g2, z2 = build_network("NY-s", quick, seed=0)
+        d = DTLP.build(g2, z=z2, xi=6)
+        stream = WeightUpdateStream(g2, alpha=0.5, tau=tau, seed=4)
+        eids, new_w = stream.next_batch()
+        d.apply_updates(eids, new_w)
+        qs = rand_queries(g2, n_q, seed=5)
+        total, avg_it = _run_queries(d, qs, 5)
+        rows.append(dict(fig="16e/iters-tau", xi=6, tau=tau, k=5,
+                         ms_per_query=round(total / n_q * 1e3, 2),
+                         avg_iterations=round(avg_it, 2)))
+    return emit("query_vs_xi_tau", rows)
+
+
+def bench_iterations_vs_k_alpha(quick=True):
+    g, z = build_network("NY-s", quick)
+    rows = []
+    n_q = 8 if quick else 50
+    d = DTLP.build(g, z=z, xi=6)
+    qs = rand_queries(g, n_q, seed=6)
+    for k in [2, 6, 12] if quick else [2, 10, 30, 50]:
+        _, avg_it = _run_queries(d, qs, k)
+        rows.append(dict(fig="iters-k", k=k, alpha=0.0,
+                         avg_iterations=round(avg_it, 2)))
+    for alpha in ([0.1, 0.3] if quick else [0.1, 0.3, 0.6]):
+        g2, z2 = build_network("NY-s", quick, seed=0)
+        d2 = DTLP.build(g2, z=z2, xi=6)
+        stream = WeightUpdateStream(g2, alpha=alpha, tau=0.3, seed=7)
+        eids, new_w = stream.next_batch()
+        d2.apply_updates(eids, new_w)
+        _, avg_it = _run_queries(d2, rand_queries(g2, n_q, seed=8), 5)
+        rows.append(dict(fig="iters-alpha", k=5, alpha=alpha,
+                         avg_iterations=round(avg_it, 2)))
+    return emit("iterations", rows)
+
+
+def main(quick=True):
+    bench_query_vs_z_k(quick)
+    bench_query_scalability(quick)
+    bench_query_vs_xi_tau(quick)
+    bench_iterations_vs_k_alpha(quick)
+
+
+if __name__ == "__main__":
+    main()

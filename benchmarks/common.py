@@ -1,0 +1,68 @@
+"""Shared benchmark harness: road networks at several scales, timing
+helpers, CSV/JSON emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.dtlp import DTLP
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# scaled-down stand-ins for NY/COL/FLA/CUSA (offline container; DIMACS
+# loaders in data/dimacs.py are used instead when the .gr files exist)
+NETWORKS = {
+    "NY-s": dict(rows=18, cols=18, z=24),
+    "COL-s": dict(rows=26, cols=26, z=32),
+    "FLA-s": dict(rows=36, cols=36, z=48),
+}
+NETWORKS_QUICK = {
+    "NY-s": dict(rows=12, cols=12, z=20),
+    "COL-s": dict(rows=16, cols=16, z=24),
+}
+
+
+def build_network(name, quick=True, seed=0, directed=False):
+    spec = (NETWORKS_QUICK if quick else NETWORKS).get(
+        name, (NETWORKS_QUICK if quick else NETWORKS)["NY-s"]
+    )
+    g = grid_road_network(spec["rows"], spec["cols"], seed=seed,
+                          directed=directed)
+    return g, spec["z"]
+
+
+def timed(fn, *args, repeat=1, **kw):
+    best = np.inf
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def rand_queries(g, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+        for _ in range(n)
+    ]
+
+
+def emit(name: str, rows: list[dict]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"bench_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    if rows:
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r.get(c, "")) for c in cols))
+    print(f"[{name}] {len(rows)} rows → {path}", flush=True)
+    return rows

@@ -1,0 +1,55 @@
+"""End-to-end driver (the paper's kind: SERVING batched requests): a
+worker cluster answers concurrent KSP queries over a dynamic road network
+while weights stream in, a worker dies mid-run, and an elastic rescale
+adds capacity — all queries stay exact.
+
+    PYTHONPATH=src python examples/serve_ksp_cluster.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.dtlp import DTLP
+from repro.core.sssp import graph_view
+from repro.core.yen import ksp
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+from repro.dist.cluster import Cluster
+
+g = grid_road_network(12, 12, seed=3)
+d = DTLP.build(g, z=20, xi=5)
+cluster = Cluster(d, n_workers=6, engine="pyen")
+stream = WeightUpdateStream(g, alpha=0.4, tau=0.5, seed=4)
+rng = np.random.default_rng(5)
+
+print(f"{g.n}-vertex network on 6 workers "
+      f"({d.partition.n_subgraphs} subgraphs, LPT-balanced)")
+
+for epoch in range(4):
+    if epoch == 1:
+        cluster.kill(2)
+        print("-- worker 2 killed: replica owners take over --")
+    if epoch == 2:
+        cluster.rescale(9)
+        print("-- elastic rescale 6 → 9 workers (no index rebuild) --")
+    t0 = time.time()
+    n_q = 15
+    view = graph_view(g)
+    for _ in range(n_q):
+        s, t = map(int, rng.choice(g.n, size=2, replace=False))
+        got = cluster.query(s, t, 3)
+        want = ksp(view, s, t, 3)
+        assert [round(x, 6) for x, _ in got] == [round(x, 6) for x, _ in want]
+    ms = (time.time() - t0) / n_q * 1e3
+    print(f"epoch {epoch}: {n_q} queries exact, {ms:.1f}ms/query, "
+          f"reissues={cluster.reissues}")
+    eids, new_w = stream.next_batch()
+    cluster.apply_updates(eids, new_w)
+
+snap = cluster.checkpoint()
+restored = Cluster.restore(
+    snap, lambda: grid_road_network(12, 12, seed=3), z=20, xi=5, engine="pyen"
+)
+s, t = 3, g.n - 2
+assert restored.query(s, t, 2) == cluster.query(s, t, 2)
+print("checkpoint → restore → identical answers. serving driver OK")

@@ -1,0 +1,73 @@
+"""Arch/shape registry interface.
+
+Every architecture exposes a list of *cells*; a cell is one (arch × shape)
+combination with everything the dry-run needs:
+
+    step_fn      — the function to lower (train_step / serve_step / ...)
+    arg_specs    — tuple of ShapeDtypeStruct pytrees (no allocation)
+    arg_axes     — matching pytrees of logical-axis tuples
+    out_axes     — logical axes for outputs (or None → unconstrained)
+
+The dry-run resolves logical axes against a concrete mesh via
+models.common.tree_shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # 'train' | 'prefill' | 'decode' | 'serve' | 'retrieval'
+    step_fn: Callable
+    arg_specs: tuple
+    arg_axes: tuple
+    note: str = ""
+    skip: str | None = None  # reason if this cell is skipped (documented)
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}×{self.shape}"
+
+
+@dataclasses.dataclass
+class Arch:
+    name: str
+    family: str  # 'lm' | 'gnn' | 'recsys' | 'ksp'
+    cells_fn: Callable[[], list[Cell]]  # lazily built (eval_shape only)
+    smoke_fn: Callable[[], dict]  # tiny real run on CPU; returns metrics
+    describe: str = ""
+
+    def cells(self) -> list[Cell]:
+        return self.cells_fn()
+
+
+_REGISTRY: dict[str, Arch] = {}
+
+
+def register(arch: Arch):
+    _REGISTRY[arch.name] = arch
+    return arch
+
+
+def get_arch(name: str) -> Arch:
+    import repro.configs.registry  # noqa: F401  (populates)
+
+    return _REGISTRY[name]
+
+
+def all_archs() -> dict[str, Arch]:
+    import repro.configs.registry  # noqa: F401
+
+    return dict(_REGISTRY)
+
+
+def axes_like(tree, axes) -> Any:
+    """Broadcast a single axes tuple over a pytree of arrays."""
+    import jax
+
+    return jax.tree.map(lambda _: axes, tree)

@@ -1,0 +1,171 @@
+"""bst [arXiv:1905.06874]: Behavior Sequence Transformer + its 4 shapes."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import ClickStream
+from repro.models import bst as B
+from repro.train.optim import OptConfig, init_opt
+from repro.train.steps import make_train_step
+
+from .base import Arch, Cell, register
+
+CFG = B.BSTConfig(
+    name="bst",
+    embed_dim=32,
+    seq_len=20,
+    n_blocks=1,
+    n_heads=8,
+    mlp=(1024, 512, 256),
+    n_items=10_000_000,
+    n_profile=1_000_000,
+)
+
+SMOKE = B.BSTConfig(
+    name="bst-smoke",
+    embed_dim=16,
+    seq_len=8,
+    n_blocks=1,
+    n_heads=4,
+    mlp=(64, 32),
+    n_items=1_000,
+    n_profile=500,
+    bag_nnz_per_row=8,
+    n_dense=4,
+)
+
+BST_SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, candidates=1_000_000),
+}
+
+
+def _batch_specs(cfg: B.BSTConfig, batch: int, with_labels: bool):
+    nnz = batch * cfg.bag_nnz_per_row
+    specs = {
+        "hist": jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+        "target": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "bag_ids": jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        "bag_seg": jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        "dense": jax.ShapeDtypeStruct((batch, cfg.n_dense), jnp.float32),
+    }
+    axes = {
+        "hist": ("batch", "seq"),
+        "target": ("batch",),
+        "bag_ids": ("batch",),
+        "bag_seg": ("batch",),
+        "dense": ("batch", "feat"),
+    }
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((batch,), jnp.float32)
+        axes["labels"] = ("batch",)
+    return specs, axes
+
+
+def bst_cells():
+    cells = []
+    opt_cfg = OptConfig()
+    p_specs = jax.eval_shape(lambda: B.init_bst(jax.random.PRNGKey(0), CFG))
+    p_axes = B.bst_axes(p_specs)
+    o_specs = jax.eval_shape(lambda: init_opt(p_specs, opt_cfg))
+    o_axes = {"m": p_axes, "v": p_axes, "step": ()}
+    for shape, meta in BST_SHAPES.items():
+        if meta["kind"] == "train":
+            b_specs, b_axes = _batch_specs(CFG, meta["batch"], True)
+            step = make_train_step(
+                functools.partial(lambda p, b, _c: B.bst_loss(p, b, _c), _c=CFG),
+                opt_cfg,
+            )
+            cells.append(
+                Cell(
+                    arch="bst", shape=shape, kind="train", step_fn=step,
+                    arg_specs=(p_specs, o_specs, b_specs),
+                    arg_axes=(p_axes, o_axes, b_axes),
+                )
+            )
+        elif meta["kind"] == "serve":
+            b_specs, b_axes = _batch_specs(CFG, meta["batch"], False)
+            cells.append(
+                Cell(
+                    arch="bst", shape=shape, kind="serve",
+                    step_fn=functools.partial(
+                        lambda p, b, _c: B.bst_serve(p, b, _c), _c=CFG
+                    ),
+                    arg_specs=(p_specs, b_specs),
+                    arg_axes=(p_axes, b_axes),
+                )
+            )
+        else:  # retrieval
+            b_specs, b_axes = _batch_specs(CFG, 1, False)
+            b_specs["candidates"] = jax.ShapeDtypeStruct(
+                (meta["candidates"],), jnp.int32
+            )
+            b_axes["candidates"] = ("candidates",)
+            cells.append(
+                Cell(
+                    arch="bst", shape=shape, kind="retrieval",
+                    step_fn=functools.partial(
+                        lambda p, b, _c: B.bst_retrieval(p, b, _c), _c=CFG
+                    ),
+                    arg_specs=(p_specs, b_specs),
+                    arg_axes=(p_axes, b_axes),
+                )
+            )
+    return cells
+
+
+def bst_smoke():
+    cfg = SMOKE
+    stream = ClickStream(
+        n_items=cfg.n_items,
+        n_profile=cfg.n_profile,
+        seq_len=cfg.seq_len,
+        batch=16,
+        bag_nnz=cfg.bag_nnz_per_row,
+        n_dense=cfg.n_dense,
+    )
+    params = B.init_bst(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptConfig(peak_lr=1e-3, warmup_steps=2)
+    opt = init_opt(params, opt_cfg)
+    step = jax.jit(
+        make_train_step(
+            functools.partial(lambda p, b, _c: B.bst_loss(p, b, _c), _c=cfg),
+            opt_cfg,
+        )
+    )
+    losses = []
+    for i in range(4):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+    # retrieval path
+    b = {k: jnp.asarray(v) for k, v in stream.batch_at(9).items()}
+    b = {k: (v[:1] if v.ndim and v.shape[0] == 16 else v) for k, v in b.items()}
+    b["bag_ids"] = b["bag_ids"][: cfg.bag_nnz_per_row]
+    b["bag_seg"] = jnp.zeros((cfg.bag_nnz_per_row,), jnp.int32)
+    b["candidates"] = jnp.arange(64, dtype=jnp.int32)
+    scores = jax.jit(
+        functools.partial(lambda p, bb, _c: B.bst_retrieval(p, bb, _c), _c=cfg)
+    )(params, b)
+    assert scores.shape == (64,) and bool(jnp.isfinite(scores).all())
+    return {"losses": losses, "loss_drop": losses[0] - losses[-1]}
+
+
+ARCH = register(
+    Arch(
+        name="bst",
+        family="recsys",
+        cells_fn=bst_cells,
+        smoke_fn=bst_smoke,
+        describe="Behavior Sequence Transformer; row-sharded tables + "
+        "EmbeddingBag(jnp.take + segment_sum)",
+    )
+)

@@ -1,0 +1,151 @@
+"""kspdg — the paper's own architecture: the distributed refine/maintain
+data plane, lowered for the production mesh like every other arch.
+
+Shapes (sized from the paper's CUSA deployment, Table 1: 121,725 subgraphs
+at z=1000, 1,000 concurrent queries):
+
+    refine_cusa   S=122,880 slabs z=1024, J=4 problems/slab  (query refine)
+    refine_dense  S=8,192  slabs z=256,  J=32                 (hot spot mix)
+    maintain      bound-distance refresh for 4M bounding paths (α=50% batch)
+    levels        ktrop bounding-path level enumeration (index build)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import dense as E
+
+from .base import Arch, Cell, register
+
+
+def _refine_step(adj, init_dist, banned_v, spur_onehot, banned_next, cap):
+    """The distributed refine batch: grouped masked BF + backpointers."""
+    dist, iters = E.bf_solve_grouped(
+        adj, init_dist, banned_v, spur_onehot, banned_next, cap,
+        max_iters=64,  # ≥ observed road-subgraph diameter at z≤1024
+    )
+    parent = E.bf_parents_grouped(adj, dist, spur_onehot, banned_next)
+    return dist, parent, iters
+
+
+def _maintain_step(unit_w, unit_n, sub_of_path, phi):
+    return E.bound_dist_batch(unit_w, unit_n, sub_of_path, phi)
+
+
+def _levels_step(adj, src):
+    return E.ktrop_solve(adj, src, k=10, max_iters=48)
+
+
+def _f32(s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def _i32(s):
+    return jax.ShapeDtypeStruct(s, jnp.int32)
+
+
+def _b(s):
+    return jax.ShapeDtypeStruct(s, jnp.bool_)
+
+
+def kspdg_cells():
+    cells = []
+    for shape, (S, z, J) in {
+        "refine_cusa": (122_880, 1024, 4),
+        "refine_dense": (8_192, 256, 32),
+    }.items():
+        specs = (
+            _f32((S, z, z)),      # adj
+            _f32((S, J, z)),      # init_dist (warm-startable)
+            _b((S, J, z)),        # banned_v
+            _b((S, J, z)),        # spur_onehot
+            _b((S, J, z)),        # banned_next
+            _f32((S, J)),         # cap
+        )
+        axes = (
+            ("subgraphs", None, None),
+            ("subgraphs", None, None),
+            ("subgraphs", None, None),
+            ("subgraphs", None, None),
+            ("subgraphs", None, None),
+            ("subgraphs", None),
+        )
+        cells.append(
+            Cell(
+                arch="kspdg", shape=shape, kind="serve",
+                step_fn=_refine_step, arg_specs=specs, arg_axes=axes,
+                note=f"S={S} z={z} J={J}",
+            )
+        )
+    # maintenance: α=50% of CUSA edges → BD refresh over all touched paths
+    S, Ez, B = 122_880, 2048, 4_000_000
+    cells.append(
+        Cell(
+            arch="kspdg", shape="maintain", kind="serve",
+            step_fn=_maintain_step,
+            arg_specs=(_f32((S, Ez)), _f32((S, Ez)), _i32((B,)), _f32((B,))),
+            arg_axes=(
+                ("subgraphs", None),
+                ("subgraphs", None),
+                ("problems",),
+                ("problems",),
+            ),
+            note=f"S={S} E_z={Ez} B={B}",
+        )
+    )
+    # index build: ξ=10 distinct vfrag levels per boundary source
+    S2, z2 = 8_192, 256
+    cells.append(
+        Cell(
+            arch="kspdg", shape="levels", kind="serve",
+            step_fn=_levels_step,
+            arg_specs=(_f32((S2, z2, z2)), _i32((S2,))),
+            arg_axes=(("subgraphs", None, None), ("subgraphs",)),
+            note=f"S={S2} z={z2} k=10",
+        )
+    )
+    return cells
+
+
+def kspdg_smoke():
+    """Engine exactness vs host Dijkstra/Yen on a real small road net."""
+    from repro.core.dtlp import DTLP
+    from repro.core.sssp import dijkstra, subgraph_view
+    from repro.core.yen import ksp
+    from repro.data.roadnet import grid_road_network
+    from repro.engine.yen_engine import engine_ksp
+
+    g = grid_road_network(8, 8, seed=7)
+    d = DTLP.build(g, z=14, xi=3)
+    slab = E.pack_subgraphs(d.partition, g.w)
+    rng = np.random.default_rng(0)
+    checked = 0
+    for si in d.sub_indexes[:3]:
+        sg = si.sg
+        adj = slab.adj[sg.gid, : slab.z, : slab.z]
+        view = subgraph_view(sg, g.w)
+        for _ in range(2):
+            a, b = rng.choice(sg.nv, size=2, replace=False)
+            got = engine_ksp(adj, int(a), int(b), 3)
+            want = ksp(view, int(a), int(b), 3)
+            gd = [round(x, 5) for x, _ in got]
+            wd = [round(x, 5) for x, _ in want]
+            assert gd == wd, (sg.gid, a, b, gd, wd)
+            checked += 1
+    return {"engine_ksp_checked": checked}
+
+
+ARCH = register(
+    Arch(
+        name="kspdg",
+        family="ksp",
+        cells_fn=kspdg_cells,
+        smoke_fn=kspdg_smoke,
+        describe="the paper's refine/maintain/index data plane on the mesh",
+    )
+)

@@ -1,0 +1,175 @@
+"""Cell builders shared by the five LM architectures."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.common import DTypePolicy, LARGE_POLICY
+from repro.train.optim import OptConfig, init_opt
+from repro.train.steps import make_train_step
+
+from .base import Arch, Cell, register
+
+# assigned LM shapes (identical across the five archs)
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4_096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+
+def _opt_cfg(policy: DTypePolicy) -> OptConfig:
+    return OptConfig(moment_dtype=policy.opt_state)
+
+
+def _axes_tree_like(specs, axes_fn):
+    """Map a specs pytree through a mirrored axes pytree."""
+    return axes_fn
+
+
+def lm_param_state(cfg: T.LMConfig, policy: DTypePolicy):
+    """(param_specs, param_axes, opt_specs, opt_axes) via eval_shape."""
+    p_specs = jax.eval_shape(
+        lambda: T.init_lm(jax.random.PRNGKey(0), cfg, policy)
+    )
+    p_axes = T.lm_axes(cfg)
+    o_specs = jax.eval_shape(lambda: init_opt(p_specs, _opt_cfg(policy)))
+    o_axes = {"m": p_axes, "v": p_axes, "step": ()}
+    return p_specs, p_axes, o_specs, o_axes
+
+
+def _batch_specs(batch: int, seq: int):
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((batch, seq), jnp.float32),
+    }
+
+
+_BATCH_AXES = {"tokens": ("batch", "seq"), "loss_mask": ("batch", "seq")}
+
+
+def lm_cells(name: str, cfg: T.LMConfig, policy: DTypePolicy,
+             long_500k_skip: str | None):
+    cells = []
+    p_specs, p_axes, o_specs, o_axes = lm_param_state(cfg, policy)
+    train_step = make_train_step(
+        functools.partial(
+            lambda params, batch, _cfg: T.lm_loss(params, batch, _cfg),
+            _cfg=cfg,
+        ),
+        _opt_cfg(policy),
+    )
+
+    for shape, meta in LM_SHAPES.items():
+        kind = meta["kind"]
+        if kind == "train":
+            cells.append(
+                Cell(
+                    arch=name, shape=shape, kind="train",
+                    step_fn=train_step,
+                    arg_specs=(p_specs, o_specs, _batch_specs(meta["batch"], meta["seq"])),
+                    arg_axes=(p_axes, o_axes, _BATCH_AXES),
+                )
+            )
+        elif kind == "prefill":
+            cells.append(
+                Cell(
+                    arch=name, shape=shape, kind="prefill",
+                    step_fn=functools.partial(
+                        lambda params, tokens, _cfg: T.lm_prefill(params, tokens, _cfg),
+                        _cfg=cfg,
+                    ),
+                    arg_specs=(
+                        p_specs,
+                        jax.ShapeDtypeStruct((meta["batch"], meta["seq"]), jnp.int32),
+                    ),
+                    arg_axes=(p_axes, ("batch", "seq")),
+                )
+            )
+        else:  # decode
+            skip = long_500k_skip if shape == "long_500k" else None
+            # pure sliding-window archs keep a ring-buffer cache of window
+            # slots (starcoder2's long_500k story); others cache seq_len.
+            cache_len = meta["seq"]
+            if cfg.window is not None and cfg.global_every is None:
+                cache_len = min(cache_len, cfg.window)
+            c_specs = T.cache_spec(cfg, meta["batch"], cache_len)
+            c_axes = T.cache_axes(cfg)
+            cells.append(
+                Cell(
+                    arch=name, shape=shape, kind="decode",
+                    step_fn=functools.partial(
+                        lambda params, cache, tokens, pos, _cfg: T.lm_decode_step(
+                            params, cache, tokens, pos, _cfg
+                        ),
+                        _cfg=cfg,
+                    ),
+                    arg_specs=(
+                        p_specs,
+                        c_specs,
+                        jax.ShapeDtypeStruct((meta["batch"], 1), jnp.int32),
+                        jax.ShapeDtypeStruct((), jnp.int32),
+                    ),
+                    arg_axes=(p_axes, c_axes, ("batch", None), ()),
+                    skip=skip,
+                )
+            )
+    return cells
+
+
+def lm_smoke(cfg_smoke: T.LMConfig):
+    """Tiny real train+decode run on CPU asserting shapes + no NaNs."""
+    import numpy as np
+
+    policy = DTypePolicy()
+    params = T.init_lm(jax.random.PRNGKey(0), cfg_smoke, policy)
+    opt = init_opt(params, _opt_cfg(policy))
+    step = jax.jit(make_train_step(
+        functools.partial(lambda p, b, c: T.lm_loss(p, b, c), c=cfg_smoke),
+        _opt_cfg(policy),
+    ))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": rng.integers(0, cfg_smoke.vocab, (2, 64)).astype(np.int32),
+        "loss_mask": np.ones((2, 64), np.float32),
+    }
+    losses = []
+    for _ in range(3):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1]), "NaN loss"
+    # decode one token
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), T.cache_spec(cfg_smoke, 2, 64)
+    )
+    logits, cache = jax.jit(
+        functools.partial(
+            lambda p, c, t, pos, _cfg: T.lm_decode_step(p, c, t, pos, _cfg),
+            _cfg=cfg_smoke,
+        )
+    )(params, cache, batch["tokens"][:, :1], jnp.int32(0))
+    assert logits.shape == (2, cfg_smoke.vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN decode logits"
+    return {"losses": losses, "loss_drop": losses[0] - losses[-1]}
+
+
+def make_lm_arch(name, cfg, smoke_cfg, policy=None, long_500k_skip=None,
+                 describe=""):
+    policy = policy or DTypePolicy()
+    return register(
+        Arch(
+            name=name,
+            family="lm",
+            cells_fn=functools.partial(
+                lm_cells, name, cfg, policy, long_500k_skip
+            ),
+            smoke_fn=functools.partial(lm_smoke, smoke_cfg),
+            describe=describe,
+        )
+    )

@@ -1,0 +1,263 @@
+"""KSP-DG: distributed filter-and-refine KSP search (Section 5).
+
+Each iteration: (filter) take the next shortest *reference path* on the
+skeleton graph G_λ; (refine) for every adjacent boundary pair on it,
+compute partial KSPs inside the covering subgraph(s) — the step that
+runs in parallel across workers/devices — then join the partial lists
+into candidate KSPs and fold them into the running top-k list L.
+Terminates when L holds k paths and the k-th is not longer than the
+next reference path (Theorem 3).
+
+Non-boundary endpoints (Section 5.2 / Step 1 on Storm): the query
+endpoints are spliced into a per-query *extended* skeleton with edges
+to every boundary vertex of their home subgraph, weighted by the exact
+within-subgraph shortest distance (a valid lower bound of itself).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .dtlp import DTLP
+from .sssp import CSRView, dijkstra, subgraph_view
+from .yen import ksp, ksp_stream
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class QueryStats:
+    iterations: int = 0
+    refine_tasks: int = 0
+    cache_hits: int = 0
+    partial_paths: int = 0
+
+
+class PartialKSPCache:
+    """(graph version, subgraph, src, dst, k) → partial KSP list.
+
+    Shared across queries of a batch; invalidated by version bump —
+    the QueryBolt-side reuse the paper leans on for concurrent queries.
+    """
+
+    def __init__(self, max_entries: int = 200_000):
+        self.data: dict = {}
+        self.max_entries = max_entries
+
+    def get(self, key):
+        return self.data.get(key)
+
+    def put(self, key, value):
+        if len(self.data) >= self.max_entries:
+            self.data.clear()
+        self.data[key] = value
+
+
+def _extended_skeleton(dtlp: DTLP, s: int, t: int):
+    """Extended G_λ view + id mappings for one query.
+
+    Returns (view, ext_of_global, global_of_ext, home) where ``home``
+    maps a non-boundary endpoint to its single home subgraph gid.
+    """
+    skel = dtlp.skeleton
+    base = skel.view()
+    g2s = skel.g2s
+    extra_vertices: list[int] = []
+    extra_edges: list[tuple[int, int, float]] = []  # (ext_i, ext_j, w)
+    home: dict = {}
+
+    def ext_id(gv: int) -> int:
+        sid = int(g2s[gv])
+        if sid >= 0:
+            return sid
+        return base.n + extra_vertices.index(gv)
+
+    for endpoint in {s, t}:
+        if int(g2s[endpoint]) >= 0:
+            continue
+        owners = dtlp.partition.subgraphs_of_vertex(endpoint)
+        if len(owners) != 1:
+            raise ValueError(f"vertex {endpoint} has owners {owners}")
+        gid = owners[0]
+        home[endpoint] = gid
+        extra_vertices.append(endpoint)
+        sg = dtlp.partition.subgraphs[gid]
+        view = subgraph_view(sg, dtlp.graph.w)
+        lsrc = sg.g2l[endpoint]
+        dist, _, _ = dijkstra(view, lsrc)
+        for lb in sg.boundary_local:
+            if np.isfinite(dist[lb]):
+                extra_edges.append((endpoint, int(sg.vertices[lb]), float(dist[lb])))
+        other = t if endpoint == s else s
+        if other in sg.g2l and other != endpoint:
+            lo = sg.g2l[other]
+            if np.isfinite(dist[lo]):
+                extra_edges.append((endpoint, other, float(dist[lo])))
+
+    n_ext = base.n + len(extra_vertices)
+    if extra_vertices:
+        h_src = [base.n + extra_vertices.index(u) for (u, v, w) in extra_edges]
+        h_dst = [ext_id(v) for (u, v, w) in extra_edges]
+        h_w = [w for (u, v, w) in extra_edges]
+        # both directions (undirected splice; for directed graphs the
+        # endpoint edges are still traversable the right way only if the
+        # subgraph Dijkstra ran in that direction — s outgoing, t incoming)
+        src_all = np.concatenate([base_src(base), np.array(h_src + h_dst, dtype=np.int64)])
+        dst_all = np.concatenate([base.nbr, np.array(h_dst + h_src, dtype=np.int64)])
+        w_all = np.concatenate([base.hw, np.array(h_w + h_w, dtype=np.float64)])
+        order = np.argsort(src_all, kind="stable")
+        counts = np.bincount(src_all, minlength=n_ext)
+        indptr = np.zeros(n_ext + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        view = CSRView(n_ext, indptr, dst_all[order], w_all[order])
+    else:
+        view = base
+
+    global_of_ext = {}
+    for gv in np.nonzero(g2s >= 0)[0]:
+        global_of_ext[int(g2s[gv])] = int(gv)
+    for i, gv in enumerate(extra_vertices):
+        global_of_ext[base.n + i] = int(gv)
+    return view, ext_id, global_of_ext, home
+
+
+def base_src(view: CSRView) -> np.ndarray:
+    return np.repeat(np.arange(view.n), np.diff(view.indptr))
+
+
+def _partial_ksps(
+    dtlp: DTLP,
+    a: int,
+    b: int,
+    k: int,
+    mode: str,
+    cache: PartialKSPCache | None,
+    stats: QueryStats,
+    home: dict,
+) -> list[tuple[float, tuple]]:
+    """k shortest a→b paths inside the subgraphs covering both (Alg. 2)."""
+    owners_a = home.get(a)
+    owners_b = home.get(b)
+    if owners_a is not None:
+        gids = [owners_a]
+    elif owners_b is not None:
+        gids = [owners_b]
+    else:
+        gids = dtlp.subgraphs_of_pair(a, b)
+    merged: list[tuple[float, tuple]] = []
+    seen = set()
+    version = dtlp.graph.version
+    for gid in gids:
+        sg = dtlp.partition.subgraphs[gid]
+        if a not in sg.g2l or b not in sg.g2l:
+            continue
+        key = (version, gid, a, b, k, mode)
+        hit = cache.get(key) if cache is not None else None
+        if hit is not None:
+            stats.cache_hits += 1
+            paths = hit
+        else:
+            stats.refine_tasks += 1
+            view = subgraph_view(sg, dtlp.graph.w)
+            local = ksp(view, sg.g2l[a], sg.g2l[b], k, mode=mode, directed=dtlp.graph.directed)
+            paths = [
+                (d, tuple(int(sg.vertices[v]) for v in p)) for d, p in local
+            ]
+            if cache is not None:
+                cache.put(key, paths)
+        for d, p in paths:
+            if p not in seen:
+                seen.add(p)
+                merged.append((d, p))
+    merged.sort(key=lambda x: (x[0], x[1]))
+    stats.partial_paths += min(len(merged), k)
+    return merged[:k]
+
+
+def _k_best_joins(segments: list[list[tuple[float, tuple]]], k: int):
+    """k best simple concatenations, one entry per segment (lazy heap)."""
+    m = len(segments)
+    if any(not seg for seg in segments):
+        return []
+    first = tuple([0] * m)
+    start_d = sum(seg[0][0] for seg in segments)
+    heap = [(start_d, first)]
+    visited = {first}
+    out = []
+    while heap and len(out) < k:
+        d, idx = heapq.heappop(heap)
+        # join the paths: consecutive segments share their joint vertex
+        verts: list[int] = []
+        ok = True
+        for j in range(m):
+            p = segments[j][idx[j]][1]
+            verts.extend(p if j == 0 else p[1:])
+        if len(set(verts)) == len(verts):
+            out.append((d, tuple(verts)))
+        for j in range(m):
+            if idx[j] + 1 < len(segments[j]):
+                nxt = idx[:j] + (idx[j] + 1,) + idx[j + 1 :]
+                if nxt not in visited:
+                    visited.add(nxt)
+                    nd = d - segments[j][idx[j]][0] + segments[j][idx[j] + 1][0]
+                    heapq.heappush(heap, (nd, nxt))
+    return out
+
+
+def ksp_dg(
+    dtlp: DTLP,
+    s: int,
+    t: int,
+    k: int,
+    *,
+    partial_mode: str = "pyen",
+    cache: PartialKSPCache | None = None,
+    max_iterations: int = 10_000,
+    refine_fn=None,
+    return_stats: bool = False,
+):
+    """KSP-DG (Algorithm 1).  Returns [(dist, path)] ascending, len ≤ k.
+
+    ``refine_fn(pairs, k)`` may be supplied by the distributed runtime to
+    compute all per-pair partial KSP lists of one iteration in parallel
+    (repro/dist.refine); default is the in-process path above.
+    """
+    stats = QueryStats()
+    if s == t:
+        result = [(0.0, (s,))]
+        return (result, stats) if return_stats else result
+    view, ext_id, global_of_ext, home = _extended_skeleton(dtlp, s, t)
+    es, et = ext_id(s), ext_id(t)
+    refs = ksp_stream(view, es, et, None, mode="yen", directed=dtlp.graph.directed)
+
+    L: list[tuple[float, tuple]] = []
+    L_set = set()
+    pending = next(refs, None)
+    while pending is not None and stats.iterations < max_iterations:
+        ref_d, ref_path_ext = pending
+        stats.iterations += 1
+        ref_path = [global_of_ext[v] for v in ref_path_ext]
+        pairs = list(zip(ref_path, ref_path[1:]))
+        if refine_fn is not None:
+            seg_lists = refine_fn(pairs, k)
+            stats.refine_tasks += len(pairs)
+        else:
+            seg_lists = [
+                _partial_ksps(dtlp, a, b, k, partial_mode, cache, stats, home)
+                for a, b in pairs
+            ]
+        for d, p in _k_best_joins(seg_lists, k):
+            if p not in L_set:
+                L_set.add(p)
+                L.append((d, p))
+        L.sort(key=lambda x: (x[0], x[1]))
+        for d_, p_ in L[k:]:
+            L_set.discard(p_)
+        L = L[:k]
+        pending = next(refs, None)
+        if pending is not None and len(L) >= k and L[k - 1][0] <= pending[0] + 1e-9:
+            break
+    return (L, stats) if return_stats else L

@@ -1,0 +1,129 @@
+"""Synthetic road-network generators + the dynamic weight model.
+
+DIMACS road networks (NY/COL/FLA/CUSA) are not available in this offline
+container; these generators produce road-like graphs: grid lattices with
+knocked-out edges (rivers/parks), diagonal shortcuts (highways) and
+integer travel-time weights.  ``data/dimacs.py`` can load the real files
+when present.
+
+The dynamic model follows the paper's use of [32] (time-varying travel
+times): at each snapshot a fraction α of edges change weight by a factor
+drawn uniformly from [1-τ, 1+τ], clamped positive.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+def grid_road_network(
+    rows: int,
+    cols: int,
+    *,
+    knockout: float = 0.08,
+    shortcut_frac: float = 0.03,
+    w_low: int = 1,
+    w_high: int = 20,
+    directed: bool = False,
+    seed: int = 0,
+) -> Graph:
+    """A rows×cols lattice with random knockouts and diagonal shortcuts."""
+    rng = np.random.default_rng(seed)
+    n = rows * cols
+    us, vs = [], []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            if c + 1 < cols:
+                us.append(v)
+                vs.append(v + 1)
+            if r + 1 < rows:
+                us.append(v)
+                vs.append(v + cols)
+    us = np.array(us, dtype=np.int64)
+    vs = np.array(vs, dtype=np.int64)
+    keep = rng.random(us.shape[0]) >= knockout
+    us, vs = us[keep], vs[keep]
+
+    n_short = int(shortcut_frac * us.shape[0])
+    if n_short:
+        su = rng.integers(0, n, n_short)
+        # short-range diagonal shortcuts
+        dr = rng.integers(1, 4, n_short)
+        dc = rng.integers(1, 4, n_short)
+        sv = np.minimum(n - 1, su + dr * cols + dc)
+        ok = sv != su
+        us = np.concatenate([us, su[ok]])
+        vs = np.concatenate([vs, sv[ok]])
+
+    # dedupe parallel edges
+    lo = np.minimum(us, vs)
+    hi = np.maximum(us, vs)
+    key = lo * n + hi
+    _, idx = np.unique(key, return_index=True)
+    us, vs = us[idx], vs[idx]
+
+    w0 = rng.integers(w_low, w_high + 1, us.shape[0]).astype(np.float64)
+    g = Graph(n, us, vs, w0, directed=directed)
+    return _largest_component(g)
+
+
+def _largest_component(g: Graph) -> Graph:
+    """Restrict to the largest (weakly) connected component."""
+    import collections
+
+    comp = np.full(g.n, -1, dtype=np.int64)
+    cid = 0
+    for s in range(g.n):
+        if comp[s] >= 0:
+            continue
+        q = collections.deque([s])
+        comp[s] = cid
+        while q:
+            u = q.popleft()
+            nbrs, _ = g.neighbors(u)
+            for v in nbrs:
+                if comp[v] < 0:
+                    comp[v] = cid
+                    q.append(v)
+        cid += 1
+    if cid == 1:
+        return g
+    sizes = np.bincount(comp)
+    big = int(np.argmax(sizes))
+    keep_v = np.nonzero(comp == big)[0]
+    remap = np.full(g.n, -1, dtype=np.int64)
+    remap[keep_v] = np.arange(keep_v.shape[0])
+    mask = (comp[g.edge_u] == big) & (comp[g.edge_v] == big)
+    return Graph(
+        keep_v.shape[0],
+        remap[g.edge_u[mask]],
+        remap[g.edge_v[mask]],
+        g.w0[mask],
+        directed=g.directed,
+    )
+
+
+class WeightUpdateStream:
+    """The [32]-style time-varying travel-time stream.
+
+    Each ``next_batch()`` returns (eids, new_w): α·m random edges whose
+    weights move by a multiplicative factor in [1-τ, 1+τ] relative to the
+    *initial* weight (so weights stay road-like instead of drifting).
+    """
+
+    def __init__(self, graph: Graph, alpha: float = 0.5, tau: float = 0.5, seed: int = 0):
+        self.graph = graph
+        self.alpha = float(alpha)
+        self.tau = float(tau)
+        self.rng = np.random.default_rng(seed)
+
+    def next_batch(self) -> tuple[np.ndarray, np.ndarray]:
+        m = self.graph.m
+        k = max(1, int(self.alpha * m))
+        eids = self.rng.choice(m, size=k, replace=False)
+        factor = 1.0 + self.rng.uniform(-self.tau, self.tau, size=k)
+        new_w = np.maximum(0.25, self.graph.w0[eids] * factor)
+        return eids, new_w

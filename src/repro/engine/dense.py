@@ -1,0 +1,341 @@
+"""TPU data plane: batched dense min-plus relaxation over padded subgraphs.
+
+The paper's hot loop — Dijkstra inside Yen's spur-path computation — is
+pointer-chasing + priority queues, hostile to TPUs.  Here it becomes:
+
+  * subgraphs → padded dense [S, z, z] adjacency slabs (min-plus semiring)
+  * one Yen iteration's deviation vertices → ONE batch of masked
+    multi-source Bellman–Ford problems (PYen's thread-level parallelism
+    becomes a batch dimension)
+  * A_D/A_P reuse → warm-start upper-bound initialization (valid for BF,
+    unlike Dijkstra)
+  * early termination → distance-cap clamping inside the relaxation
+
+`bf_solve` / `ktrop_solve` are the jnp references; kernels/ hosts the
+Pallas versions of the inner relaxation step with VMEM BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(3.0e38)  # finite "infinity": keeps min-plus NaN-free
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SubgraphSlab:
+    """Padded dense subgraph batch + bookkeeping (host side)."""
+
+    adj: np.ndarray        # float32[S, z, z] min-plus adjacency (INF padded)
+    nv: np.ndarray         # int32[S] true vertex counts
+    gids: np.ndarray       # int64[S] original subgraph ids
+    z: int
+
+    @property
+    def n_sub(self) -> int:
+        return int(self.adj.shape[0])
+
+
+def pack_subgraphs(partition, weights, z_pad: int | None = None) -> SubgraphSlab:
+    """Dense-pack every subgraph of a core Partition under `weights`."""
+    subs = partition.subgraphs
+    z = max(sg.nv for sg in subs)
+    if z_pad is not None:
+        z = max(z, z_pad)
+    # round up to the 128-lane tile the Pallas kernels (bf_relax/ktrop)
+    # block on — slabs from this packer drop into the kernels directly
+    z = int(128 * ((z + 127) // 128))
+    S = len(subs)
+    adj = np.full((S, z, z), float(INF), dtype=np.float32)
+    nv = np.zeros(S, dtype=np.int32)
+    for i, sg in enumerate(subs):
+        a = sg.local_adjacency(weights, inf=float(INF))
+        adj[i, : sg.nv, : sg.nv] = a
+        adj[i, np.arange(sg.nv), np.arange(sg.nv)] = 0.0
+        nv[i] = sg.nv
+    return SubgraphSlab(
+        adj=adj, nv=nv, gids=np.array([sg.gid for sg in subs]), z=z
+    )
+
+
+# ---------------------------------------------------------------------------
+# batched masked Bellman–Ford
+# ---------------------------------------------------------------------------
+def bf_step(dist, adj, spur_onehot, banned_next):
+    """One min-plus relaxation: d'[p,v] = min(d[p,v], min_u d[p,u]+A[p,u,v])
+    with the spur row's banned next-edges cut (Yen's deviation semantics).
+
+    dist [P,z], adj [P,z,z], spur_onehot [P,z] bool, banned_next [P,z] bool.
+    Spur-row-edit formulation (§Perf H-C1): no [P,z,z] mask tensors."""
+    d_no_spur = jnp.where(spur_onehot, INF, dist)
+    base = jnp.min(d_no_spur[:, :, None] + adj, axis=1)  # [P,z]
+    d_spur = jnp.min(jnp.where(spur_onehot, dist, INF), axis=1)  # [P]
+    spur_idx0 = jnp.argmax(spur_onehot, axis=1)  # [P]
+    spur_row = jnp.take_along_axis(adj, spur_idx0[:, None, None], axis=1)[:, 0]
+    spur_part = jnp.where(banned_next, INF, d_spur[:, None] + spur_row)
+    has_spur = jnp.any(spur_onehot, axis=1, keepdims=True)
+    spur_part = jnp.where(has_spur, spur_part, INF)
+    return jnp.minimum(dist, jnp.minimum(base, spur_part))
+
+
+def bf_solve(
+    adj,                 # [P, z, z] per-problem dense adjacency
+    init_dist,           # [P, z] (+INF except sources / warm start)
+    banned_v=None,       # [P, z] bool: Yen root-path vertex masks
+    spur_onehot=None,    # [P, z] bool
+    banned_next=None,    # [P, z] bool
+    cap=None,            # [P] distance caps (early termination)
+    max_iters: int | None = None,
+):
+    """Converged multi-source distances [P, z] (+ iteration count)."""
+    P, z, _ = adj.shape
+    if banned_v is None:
+        banned_v = jnp.zeros((P, z), bool)
+    if spur_onehot is None:
+        spur_onehot = jnp.zeros((P, z), bool)
+    if banned_next is None:
+        banned_next = jnp.zeros((P, z), bool)
+    dist0 = jnp.where(banned_v, INF, init_dist)
+    max_iters = max_iters if max_iters is not None else z
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        dist, _, it = state
+        new = bf_step(dist, adj, spur_onehot, banned_next)
+        new = jnp.where(banned_v, INF, new)
+        if cap is not None:
+            new = jnp.where(new > cap[:, None], INF, new)
+        changed = jnp.any(new < dist)
+        return new, changed, it + 1
+
+    dist, _, iters = jax.lax.while_loop(
+        cond, body, (dist0, jnp.bool_(True), jnp.int32(0))
+    )
+    return dist, iters
+
+
+def bf_parents(adj, dist, spur_onehot, banned_next):
+    """Backpointers from a converged distance field: parent[p,v] = argmin_u
+    d[u] + A[u,v] where the min equals d[v]; -1 at sources/unreached.
+    Spur-row-edit formulation (§Perf H-C1)."""
+    z = adj.shape[-1]
+    eye = jnp.eye(z, dtype=bool)
+    adj_nd = jnp.where(eye[None], INF, adj)  # the 0-diagonal is not a hop
+    d_no_spur = jnp.where(spur_onehot, INF, dist)
+    contrib = d_no_spur[:, :, None] + adj_nd
+    best_u = jnp.argmin(contrib, axis=1)  # [P, z]
+    best_val = jnp.min(contrib, axis=1)
+    d_spur = jnp.min(jnp.where(spur_onehot, dist, INF), axis=1)
+    spur_idx = jnp.argmax(spur_onehot, axis=1)  # [P]
+    spur_row = jnp.take_along_axis(adj_nd, spur_idx[:, None, None], axis=1)[:, 0]
+    spur_part = jnp.where(banned_next, INF, d_spur[:, None] + spur_row)
+    has_spur = jnp.any(spur_onehot, axis=1, keepdims=True)
+    spur_part = jnp.where(has_spur, spur_part, INF)
+    use_spur = spur_part < best_val
+    best_u = jnp.where(use_spur, spur_idx[:, None], best_u)
+    best_val = jnp.minimum(best_val, spur_part)
+    ok = jnp.abs(best_val - dist) <= 1e-6 * jnp.maximum(1.0, jnp.abs(dist))
+    reached = dist < INF / 2
+    src = dist <= 0.0
+    return jnp.where(ok & reached & ~src, best_u, -1)
+
+
+# ---------------------------------------------------------------------------
+# grouped layout: problems co-located with their subgraph slab
+# ---------------------------------------------------------------------------
+# At CUSA scale a per-problem adjacency gather ([P,z,z]) is prohibitive
+# (and collective-bound when problems and slabs shard differently).  The
+# distributed refine step therefore GROUPS problems by owning subgraph on
+# the host and relaxes them as [S, J, z] against adj [S, z, z] — a batched
+# tropical "matmul" with zero gather, matching the paper's owner-aligned
+# task placement (Section 6.1's SubgraphBolts).
+def bf_step_grouped(dist, adj, spur_onehot, banned_next):
+    """dist [S,J,z], adj [S,z,z], masks [S,J,z] →  one relaxation.
+
+    §Perf H-C1: Yen's spur-row cut is applied WITHOUT a [S,J,z,z] mask.
+    The banned edges all leave the (single) spur vertex, so:
+        min over allowed u  =  min( min_{u≠spur} (d[u]+A[u,·]),
+                                    d[spur]+A[spur,·] where not banned )
+    — two cheap [S,J,z] row edits replace five 4-D mask tensors."""
+    d_no_spur = jnp.where(spur_onehot, INF, dist)  # [S,J,z]
+    base = jnp.min(
+        d_no_spur[:, :, :, None] + adj[:, None, :, :], axis=2
+    )  # [S,J,z]
+    d_spur = jnp.min(jnp.where(spur_onehot, dist, INF), axis=2)  # [S,J]
+    spur_idx = jnp.argmax(spur_onehot, axis=2)  # [S,J]
+    spur_row = jnp.take_along_axis(
+        adj, spur_idx[:, :, None], axis=1
+    )  # [S,J,z]: A[spur_j, ·] — a gather, NOT an adj-rereading einsum
+    spur_part = jnp.where(
+        banned_next, INF, d_spur[:, :, None] + spur_row
+    )
+    has_spur = jnp.any(spur_onehot, axis=2, keepdims=True)
+    spur_part = jnp.where(has_spur, spur_part, INF)
+    return jnp.minimum(dist, jnp.minimum(base, spur_part))
+
+
+def bf_solve_grouped(
+    adj, init_dist, banned_v=None, spur_onehot=None, banned_next=None,
+    cap=None, max_iters: int | None = None,
+):
+    """Grouped masked BF: returns (dist [S,J,z], iters)."""
+    S, J, z = init_dist.shape
+    if banned_v is None:
+        banned_v = jnp.zeros((S, J, z), bool)
+    if spur_onehot is None:
+        spur_onehot = jnp.zeros((S, J, z), bool)
+    if banned_next is None:
+        banned_next = jnp.zeros((S, J, z), bool)
+    dist0 = jnp.where(banned_v, INF, init_dist)
+    max_iters = max_iters if max_iters is not None else z
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        dist, _, it = state
+        new = bf_step_grouped(dist, adj, spur_onehot, banned_next)
+        new = jnp.where(banned_v, INF, new)
+        if cap is not None:
+            new = jnp.where(new > cap[:, :, None], INF, new)
+        changed = jnp.any(new < dist)
+        return new, changed, it + 1
+
+    dist, _, iters = jax.lax.while_loop(
+        cond, body, (dist0, jnp.bool_(True), jnp.int32(0))
+    )
+    return dist, iters
+
+
+def bf_parents_grouped(adj, dist, spur_onehot, banned_next):
+    """Backpointers via the same spur-row-edit trick (§Perf H-C1): one
+    [S,J,z,z] argmin stream instead of five mask tensors."""
+    z = adj.shape[-1]
+    eye = jnp.eye(z, dtype=bool)
+    adj_nd = jnp.where(eye, INF, adj)  # [S,z,z] once (0-diag is not a hop)
+    d_no_spur = jnp.where(spur_onehot, INF, dist)
+    contrib = d_no_spur[:, :, :, None] + adj_nd[:, None, :, :]
+    best_u = jnp.argmin(contrib, axis=2)  # [S,J,z]
+    best_val = jnp.min(contrib, axis=2)
+    # spur-row candidate (allowed edges only)
+    d_spur = jnp.min(jnp.where(spur_onehot, dist, INF), axis=2)
+    spur_idx = jnp.argmax(spur_onehot, axis=2)  # [S,J]
+    spur_row = jnp.take_along_axis(adj_nd, spur_idx[:, :, None], axis=1)
+    spur_part = jnp.where(banned_next, INF, d_spur[:, :, None] + spur_row)
+    has_spur = jnp.any(spur_onehot, axis=2, keepdims=True)
+    spur_part = jnp.where(has_spur, spur_part, INF)
+    use_spur = spur_part < best_val
+    best_u = jnp.where(use_spur, spur_idx[:, :, None], best_u)
+    best_val = jnp.minimum(best_val, spur_part)
+    ok = jnp.abs(best_val - dist) <= 1e-6 * jnp.maximum(1.0, jnp.abs(dist))
+    reached = dist < INF / 2
+    src = dist <= 0.0
+    return jnp.where(ok & reached & ~src, best_u, -1)
+
+
+# ---------------------------------------------------------------------------
+# k-tropical relaxation: k distinct smallest walk distances
+# ---------------------------------------------------------------------------
+def ktrop_step(D, adj, distinct: bool = True):
+    """D [P,k,z] ascending per (p,:,v) → one relaxation round."""
+    P, k, z = D.shape
+    # candidates via every intermediate u: D[p,j,u] + A[p,u,v]
+    cand = D[:, :, :, None] + adj[:, None, :, :]  # [P,k,z,z]
+    cand = cand.transpose(0, 3, 1, 2).reshape(P, z, k * z)
+    allv = jnp.concatenate([D.transpose(0, 2, 1), cand], axis=-1)
+    allv = jnp.sort(allv, axis=-1)
+    if distinct:
+        dup = jnp.concatenate(
+            [
+                jnp.zeros((P, z, 1), bool),
+                allv[..., 1:] == allv[..., :-1],
+            ],
+            axis=-1,
+        )
+        allv = jnp.where(dup, INF, allv)
+        allv = jnp.sort(allv, axis=-1)
+    return allv[..., :k].transpose(0, 2, 1)  # [P,k,z]
+
+
+def ktrop_solve(adj, src, k: int, max_iters: int | None = None,
+                distinct: bool = True):
+    """k distinct smallest walk distances from src to every vertex.
+
+    adj [P,z,z]; src int32[P] → D [P,k,z] ascending (+INF padded)."""
+    P, z, _ = adj.shape
+    D0 = jnp.full((P, k, z), INF)
+    D0 = D0.at[jnp.arange(P), 0, src].set(0.0)
+    max_iters = max_iters if max_iters is not None else z * k + 8
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        D, _, it = state
+        new = ktrop_step(D, adj, distinct)
+        changed = jnp.any(new < D)
+        return new, changed, it + 1
+
+    D, _, _ = jax.lax.while_loop(
+        cond, body, (D0, jnp.bool_(True), jnp.int32(0))
+    )
+    return D
+
+
+# ---------------------------------------------------------------------------
+# bound distances: BD(φ) = sum of the φ smallest unit weights
+# ---------------------------------------------------------------------------
+def bound_dist(unit_w, unit_n, phi):
+    """unit_w [S,E] unit weights (+INF pad), unit_n [S,E] vfrag counts,
+    phi [B] fragment counts with subgraph ids sub [B] folded in by caller.
+
+    Returns, per subgraph, the prefix function evaluated at each φ:
+    BD = Σ smallest φ unit weights where weight w_e appears n_e times.
+    Implemented as sort + weighted prefix sums + searchsorted — the jnp
+    reference of kernels/bound_dist."""
+    order = jnp.argsort(unit_w, axis=-1)
+    w_sorted = jnp.take_along_axis(unit_w, order, axis=-1)  # [S,E]
+    n_sorted = jnp.take_along_axis(unit_n, order, axis=-1)
+    cum_n = jnp.cumsum(n_sorted, axis=-1)  # fragments so far
+    cum_w = jnp.cumsum(n_sorted * w_sorted, axis=-1)  # weight so far
+
+    def bd_one(cn, cw, ws, p):
+        # position of the block containing the p-th fragment
+        i = jnp.searchsorted(cn, p, side="left")
+        i = jnp.clip(i, 0, cn.shape[0] - 1)
+        prev_n = jnp.where(i > 0, cn[jnp.maximum(i - 1, 0)], 0)
+        prev_w = jnp.where(i > 0, cw[jnp.maximum(i - 1, 0)], 0.0)
+        return prev_w + (p - prev_n) * ws[i]
+
+    return bd_one(cum_n, cum_w, w_sorted, phi)
+
+
+def bound_dist_batch(unit_w, unit_n, sub_of_path, phi):
+    """Vectorized BD for a batch of bounding paths: unit_w/unit_n [S,E],
+    sub_of_path [B] int, phi [B] → [B]."""
+    order = jnp.argsort(unit_w, axis=-1)
+    w_sorted = jnp.take_along_axis(unit_w, order, axis=-1)
+    n_sorted = jnp.take_along_axis(unit_n, order, axis=-1)
+    cum_n = jnp.cumsum(n_sorted, axis=-1)
+    cum_w = jnp.cumsum(n_sorted * w_sorted, axis=-1)
+    cn = cum_n[sub_of_path]  # [B,E]
+    cw = cum_w[sub_of_path]
+    ws = w_sorted[sub_of_path]
+    i = jax.vmap(lambda c, p: jnp.searchsorted(c, p, side="left"))(cn, phi)
+    i = jnp.clip(i, 0, cn.shape[-1] - 1)
+    take = lambda a, idx: jnp.take_along_axis(a, idx[:, None], axis=-1)[:, 0]  # noqa: E731
+    prev_n = jnp.where(i > 0, take(cn, jnp.maximum(i - 1, 0)), 0)
+    prev_w = jnp.where(i > 0, take(cw, jnp.maximum(i - 1, 0)), 0.0)
+    return prev_w + (phi - prev_n) * take(ws, i)

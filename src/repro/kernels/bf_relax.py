@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused masked min-plus Bellman–Ford relaxation.
+
+One grid step computes, for subgraph s and an output vertex tile t of
+width TV:
+
+    new[j, t] = clamp_cap( min( dist[j, t],
+                  min_u  dist[j, u] + adj[u, t]  (spur-row cuts applied) ) )
+
+Memory plan (TPU v5e, 16 MiB VMEM/core):
+    dist tile     [J, z]    f32   J≤32, z≤1024  → ≤128 KiB
+    adj tile      [z, TV]   f32   z≤1024, TV=128 → 512 KiB
+    contrib       [J, z, TV] f32 intermediate   → ≤16 MiB at J=32,z=1024?
+      — no: the u-reduction is BLOCKED over z in chunks of UZ=256 so the
+      live intermediate is [J, UZ, TV] ≤ 4 MiB.
+    MXU is unused (tropical semiring has no matmul); this is a VPU
+    min/add kernel and the roofline treats it as memory-bound, so tiles
+    are chosen to stream adj exactly once per output tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 3.0e38  # python float: jnp constants become captured consts in Pallas
+
+_TV = 128   # output vertex tile (lane dimension)
+_UZ = 256   # u-reduction chunk
+
+
+def _bf_relax_kernel(dist_ref, adj_ref, spur_ref, ban_ref, cap_ref, out_ref):
+    # dist_ref [1, J, z]; adj_ref [1, z, TV]; spur_ref [1, J, z];
+    # ban_ref [1, J, TV]; cap_ref [1, J]; out_ref [1, J, TV]
+    d = dist_ref[0]            # [J, z]
+    spur = spur_ref[0]         # [J, z] f32 0/1
+    ban = ban_ref[0]           # [J, TV] f32 0/1
+    cap = cap_ref[0]           # [J]
+    J, z = d.shape
+    TV = out_ref.shape[2]
+
+    best = jnp.full((J, TV), INF, jnp.float32)
+    n_chunks = z // _UZ if z % _UZ == 0 else (z + _UZ - 1) // _UZ
+    for c in range(n_chunks):  # static unroll: z known at trace time
+        u0 = c * _UZ
+        uz = min(_UZ, z - u0)
+        dc = jax.lax.dynamic_slice(d, (0, u0), (J, uz))        # [J, uz]
+        ac = jax.lax.dynamic_slice(adj_ref[0], (u0, 0), (uz, TV))
+        sc = jax.lax.dynamic_slice(spur, (0, u0), (J, uz))
+        contrib = dc[:, :, None] + ac[None, :, :]               # [J, uz, TV]
+        cut = (sc[:, :, None] * ban[:, None, :]) > 0.5
+        contrib = jnp.where(cut, INF, contrib)
+        best = jnp.minimum(best, jnp.min(contrib, axis=1))
+
+    # self tile of dist for the jnp.minimum(dist, ·) term
+    t = pl.program_id(1)
+    d_self = jax.lax.dynamic_slice(d, (0, t * TV), (J, TV))
+    new = jnp.minimum(d_self, best)
+    new = jnp.where(new > cap[:, None], INF, new)
+    out_ref[0] = new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bf_relax(dist, adj, spur_onehot, banned_next, cap, *, interpret=False):
+    """dist [S,J,z] f32, adj [S,z,z] f32, spur_onehot/banned_next [S,J,z]
+    f32 0/1 masks, cap [S,J] f32 → relaxed dist [S,J,z]."""
+    S, J, z = dist.shape
+    assert z % _TV == 0, f"z must be a multiple of {_TV}"
+    grid = (S, z // _TV)
+    return pl.pallas_call(
+        _bf_relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, J, z), lambda s, t: (s, 0, 0)),
+            pl.BlockSpec((1, z, _TV), lambda s, t: (s, 0, t)),
+            pl.BlockSpec((1, J, z), lambda s, t: (s, 0, 0)),
+            pl.BlockSpec((1, J, _TV), lambda s, t: (s, 0, t)),
+            pl.BlockSpec((1, J), lambda s, t: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, J, _TV), lambda s, t: (s, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((S, J, z), jnp.float32),
+        interpret=interpret,
+    )(dist, adj, spur_onehot, banned_next, cap)

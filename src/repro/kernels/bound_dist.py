@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: batched bound-distance evaluation.
+
+BD(φ) over an ascending-sorted unit-weight profile is sort-free at query
+time:  BD(φ) = Σ_e w_e · clip(φ − cum_before_e, 0, n_e).
+
+Queries are blocked [TB]; each grid step streams its subgraph's profile
+rows via a scalar-prefetch index map (queries are pre-grouped by subgraph
+on the host, the same owner-alignment the refine step uses), reducing the
+[TB, E] product on the VPU.  Memory-bound by design: one profile row read
+per query block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_TB = 256   # queries per block (one subgraph's row reused across them)
+
+
+def _bound_dist_kernel(sub_ref, ws_ref, ns_ref, cb_ref, phi_ref, out_ref):
+    # ws/ns/cb [1, E] (the block's subgraph row), phi [TB], out [TB]
+    ws = ws_ref[0]
+    ns = ns_ref[0]
+    cb = cb_ref[0]
+    phi = phi_ref[...]
+    take = jnp.clip(phi[:, None] - cb[None, :], 0.0, ns[None, :])
+    out_ref[...] = jnp.sum(ws[None, :] * take, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bound_dist(w_sorted, n_sorted, cum_before, sub_blocked, phi, *,
+               interpret=False):
+    """w_sorted/n_sorted/cum_before [S,E] f32; sub_blocked [B//TB] i32 (the
+    owning subgraph of each query BLOCK — queries pre-grouped by subgraph);
+    phi [B] f32 → BD [B] f32."""
+    S, E = w_sorted.shape
+    B = phi.shape[0]
+    assert B % _TB == 0, f"B must be a multiple of {_TB}"
+    grid = (B // _TB,)
+
+    return pl.pallas_call(
+        _bound_dist_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, E), lambda b, sub: (sub[b], 0)),
+                pl.BlockSpec((1, E), lambda b, sub: (sub[b], 0)),
+                pl.BlockSpec((1, E), lambda b, sub: (sub[b], 0)),
+                pl.BlockSpec((_TB,), lambda b, sub: (b,)),
+            ],
+            out_specs=pl.BlockSpec((_TB,), lambda b, sub: (b,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(sub_blocked, w_sorted, n_sorted, cum_before, phi)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: k-distinct tropical relaxation step.
+
+For each output vertex tile, merges the existing k levels with all
+one-step extensions D[j,u] + A[u,t] and extracts the k smallest DISTINCT
+values by k passes of strict-greater masked minima (sort-free — TPU has
+no efficient in-kernel sort; k passes of VPU reductions replace it).
+
+VMEM plan: D [k, z] (k≤16, z≤1024 → 64 KiB), adj [z, TV] (512 KiB),
+blocked u-chunks keep the contrib intermediate ≤ [k, UZ, TV] = 2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 3.0e38  # python float: jnp constants become captured consts in Pallas
+
+_TV = 128
+_UZ = 256
+
+
+def _ktrop_kernel(D_ref, adj_ref, out_ref, *, k):
+    D = D_ref[0]          # [k, z]
+    z = D.shape[1]
+    TV = out_ref.shape[2]
+    t = pl.program_id(1)
+
+    d_self = jax.lax.dynamic_slice(D, (0, t * TV), (k, TV))  # [k, TV]
+
+    # extract k smallest distinct values per column across
+    # {d_self} ∪ {D[:,u] + A[u,t]}.  k passes: level_i = min of values
+    # strictly greater than level_{i-1}.
+    prev = jnp.full((TV,), -INF, jnp.float32)
+    n_chunks = (z + _UZ - 1) // _UZ
+    for i in range(k):
+        cur = jnp.min(
+            jnp.where(d_self > prev[None, :], d_self, INF), axis=0
+        )
+        for c in range(n_chunks):
+            u0 = c * _UZ
+            uz = min(_UZ, z - u0)
+            dc = jax.lax.dynamic_slice(D, (0, u0), (k, uz))       # [k, uz]
+            ac = jax.lax.dynamic_slice(adj_ref[0], (u0, 0), (uz, TV))
+            contrib = dc[:, :, None] + ac[None, :, :]             # [k,uz,TV]
+            masked = jnp.where(contrib > prev[None, None, :], contrib, INF)
+            cur = jnp.minimum(cur, jnp.min(masked, axis=(0, 1)))
+        out_ref[0, i] = cur
+        prev = cur
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ktrop_relax(D, adj, *, interpret=False):
+    """D [S,k,z] ascending f32, adj [S,z,z] f32 → new D [S,k,z]."""
+    S, k, z = D.shape
+    assert z % _TV == 0, f"z must be a multiple of {_TV}"
+    grid = (S, z // _TV)
+    return pl.pallas_call(
+        functools.partial(_ktrop_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k, z), lambda s, t: (s, 0, 0)),
+            pl.BlockSpec((1, z, _TV), lambda s, t: (s, 0, t)),
+        ],
+        out_specs=pl.BlockSpec((1, k, _TV), lambda s, t: (s, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((S, k, z), jnp.float32),
+        interpret=interpret,
+    )(D, adj)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+shape/dtype sweeps assert against)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = jnp.float32(3.0e38)
+
+
+def bf_relax_ref(dist, adj, spur_onehot, banned_next, cap):
+    """One fused masked min-plus relaxation (grouped layout).
+
+    dist [S,J,z] f32; adj [S,z,z] f32; spur_onehot/banned_next [S,J,z]
+    bool; cap [S,J] f32 → new dist [S,J,z]."""
+    contrib = dist[:, :, :, None] + adj[:, None, :, :]
+    cut = spur_onehot[:, :, :, None] & banned_next[:, :, None, :]
+    contrib = jnp.where(cut, INF, contrib)
+    new = jnp.minimum(dist, jnp.min(contrib, axis=2))
+    return jnp.where(new > cap[:, :, None], INF, new)
+
+
+def ktrop_relax_ref(D, adj):
+    """One k-distinct tropical relaxation (k smallest DISTINCT values
+    among existing levels and one-step extensions).
+
+    D [S,k,z] ascending per (s,:,v) → new D [S,k,z]."""
+    S, k, z = D.shape
+    cand = D[:, :, :, None] + adj[:, None, :, :]  # [S,k,z,z]
+    cand = cand.transpose(0, 3, 1, 2).reshape(S, z, k * z)
+    allv = jnp.concatenate([D.transpose(0, 2, 1), cand], axis=-1)
+    allv = jnp.sort(allv, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros((S, z, 1), bool), allv[..., 1:] == allv[..., :-1]], axis=-1
+    )
+    allv = jnp.where(dup, INF, allv)
+    allv = jnp.sort(allv, axis=-1)
+    return allv[..., :k].transpose(0, 2, 1)
+
+
+def bound_dist_ref(w_sorted, n_sorted, cum_before, sub, phi):
+    """BD(φ) = Σ_e w_e · clip(φ − cum_before_e, 0, n_e) over the φ
+    smallest unit weights (ascending-sorted profile).
+
+    w_sorted/n_sorted/cum_before [S,E] f32; sub [B] i32; phi [B] f32."""
+    ws = w_sorted[sub]     # [B,E]
+    ns = n_sorted[sub]
+    cb = cum_before[sub]
+    take = jnp.clip(phi[:, None] - cb, 0.0, ns)
+    return jnp.sum(ws * take, axis=-1)

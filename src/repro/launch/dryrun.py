@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements in this file — jax
+locks the device count on first init, and the dry-run (and only the
+dry-run) needs 512 placeholder devices for the production mesh.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun.jsonl
+
+Per cell it records: compile success, memory_analysis (bytes/device),
+cost_analysis FLOPs/bytes, and the collective schedule → roofline terms.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import all_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import extract_roofline
+from repro.models.common import axis_rules, specs_shardings
+
+
+def run_cell(cell, mesh, rules=None, verbose=True):
+    """Lower + compile one cell under one mesh; returns a result dict."""
+    n_dev = mesh.devices.size
+    rec = {
+        "cell": cell.name,
+        "arch": cell.arch,
+        "shape": cell.shape,
+        "kind": cell.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "note": cell.note,
+    }
+    if cell.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip
+        return rec
+    t0 = time.time()
+    try:
+        with axis_rules(mesh, rules):
+            in_sh = tuple(
+                specs_shardings(s, a, mesh, rules)
+                for s, a in zip(cell.arg_specs, cell.arg_axes)
+            )
+            # fresh closure per (cell, mesh): jax's trace cache would
+            # otherwise replay sharding constraints from the previous mesh
+            fn = cell.step_fn
+            step = jax.jit((lambda *a: fn(*a)), in_shardings=in_sh)
+            lowered = step.lower(*cell.arg_specs)
+            rec["t_lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["t_compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None
+            ),
+        }
+        roof = extract_roofline(compiled, n_dev)
+        rec["roofline"] = roof.as_dict()
+        rec["status"] = "ok"
+        if verbose:
+            print(
+                f"OK  {cell.name:44s} mesh={rec['mesh']:9s} "
+                f"compile={rec['t_compile_s']:7.1f}s "
+                f"Tc={roof.t_compute:9.3e} Tm={roof.t_memory:9.3e} "
+                f"Tcoll={roof.t_collective:9.3e} dom={roof.dominant}",
+                flush=True,
+            )
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"ERR {cell.name:44s} {rec['error'][:120]}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument(
+        "--mesh", choices=["single", "multi", "both"], default="both"
+    )
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--rules", default=None, help="JSON logical-axis rules override")
+    args = ap.parse_args()
+
+    archs = all_archs()
+    names = args.arch if args.arch else (sorted(archs) if args.all else [])
+    if not names:
+        ap.error("pass --arch <name> (repeatable) or --all")
+    rules = json.loads(args.rules) if args.rules else None
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(make_production_mesh(multi_pod=False))
+    if args.mesh in ("multi", "both"):
+        meshes.append(make_production_mesh(multi_pod=True))
+
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = n_err = n_skip = 0
+    for name in names:
+        for cell in archs[name].cells():
+            if args.shape and cell.shape not in args.shape:
+                continue
+            for mesh in meshes:
+                rec = run_cell(cell, mesh, rules)
+                if out_f:
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+                n_ok += rec["status"] == "ok"
+                n_err += rec["status"] == "error"
+                n_skip += rec["status"] == "skipped"
+    print(f"done: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if out_f:
+        out_f.close()
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

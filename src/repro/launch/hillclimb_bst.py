@@ -1,0 +1,114 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb B driver: bst×train_batch — dense AdamW tables vs
+sparse rowwise-Adagrad touched-rows-only updates (H-B1), plus variants."""
+
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import all_archs
+from repro.configs.bst_arch import CFG
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import extract_roofline
+from repro.models import bst as B
+from repro.models.common import axis_rules, specs_shardings
+from repro.train.optim import OptConfig, init_opt
+
+
+def sparse_cell_specs(cfg=CFG):
+    opt_cfg = OptConfig()
+    p_specs = jax.eval_shape(lambda: B.init_bst(jax.random.PRNGKey(0), cfg))
+    p_axes = B.bst_axes(p_specs)
+    net_specs = {
+        k: v for k, v in p_specs.items()
+        if k not in ("item_table", "profile_table")
+    }
+    net_axes = {k: p_axes[k] for k in net_specs}
+    t_specs = jax.eval_shape(lambda: B.init_bst_sparse_opt(p_specs))
+    t_axes = {"item_acc": ("rows",), "profile_acc": ("rows",)}
+    no_specs = jax.eval_shape(lambda: init_opt(net_specs, opt_cfg))
+    no_axes = {"m": net_axes, "v": net_axes, "step": ()}
+    batch = 65_536
+    nnz = batch * CFG.bag_nnz_per_row
+    b_specs = {
+        "hist": jax.ShapeDtypeStruct((batch, CFG.seq_len), jnp.int32),
+        "target": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "bag_ids": jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        "bag_seg": jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        "dense": jax.ShapeDtypeStruct((batch, CFG.n_dense), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+    b_axes = {
+        "hist": ("batch", "seq"), "target": ("batch",),
+        "bag_ids": ("batch",), "bag_seg": ("batch",),
+        "dense": ("batch", "feat"), "labels": ("batch",),
+    }
+    step = functools.partial(
+        lambda p, t, n, b, _c, _o: B.bst_sparse_train_step(p, t, n, b, _c, _o),
+        _c=cfg, _o=opt_cfg,
+    )
+    return step, (p_specs, t_specs, no_specs, b_specs), (
+        p_axes, t_axes, no_axes, b_axes,
+    )
+
+
+def run(step, specs, axes, mesh, rules=None, label="", donate=()):
+    with axis_rules(mesh, rules):
+        in_sh = tuple(
+            specs_shardings(s, a, mesh, rules) for s, a in zip(specs, axes)
+        )
+        compiled = (
+            jax.jit((lambda *a: step(*a)), in_shardings=in_sh,
+                    donate_argnums=donate)
+            .lower(*specs)
+            .compile()
+        )
+    roof = extract_roofline(compiled, mesh.devices.size)
+    rec = dict(label=label, **roof.as_dict())
+    print(
+        f"{label:32s} Tc={roof.t_compute:.3e} Tm={roof.t_memory:.3e} "
+        f"Tcoll={roof.t_collective:.3e} dom={roof.dominant}",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)
+    out = open("results/hillclimb_B.jsonl", "a")
+    # baseline: registry dense-AdamW cell
+    cell = [
+        c for c in all_archs()["bst"].cells() if c.shape == "train_batch"
+    ][0]
+    rec = run(cell.step_fn, cell.arg_specs, cell.arg_axes, mesh,
+              label="dense-adamw (baseline)")
+    out.write(json.dumps(rec) + "\n")
+    # H-B1: sparse rowwise updates
+    step, specs, axes = sparse_cell_specs()
+    rec = run(step, specs, axes, mesh, label="sparse rowwise (H-B1)")
+    out.write(json.dumps(rec) + "\n")
+    # H-B2: sparse + tables sharded over ALL axes (rows over data+model)
+    rec = run(step, specs, axes, mesh,
+              rules={"rows": ("data", "model")},
+              label="sparse + rows@(data,model) (H-B2)")
+    out.write(json.dumps(rec) + "\n")
+    # H-B3: sparse + bf16 activations
+    import dataclasses as _dc
+    cfg_bf16 = _dc.replace(CFG, compute_dtype="bf16")
+    step3, specs3, axes3 = sparse_cell_specs(cfg_bf16)
+    rec = run(step3, specs3, axes3, mesh, label="sparse + bf16 (H-B3)")
+    out.write(json.dumps(rec) + "\n")
+    # H-B4: + donation (in-place table/opt buffers)
+    rec = run(step3, specs3, axes3, mesh, label="sparse + bf16 + donate (H-B4)",
+              donate=(0, 1, 2))
+    out.write(json.dumps(rec) + "\n")
+    out.close()
+
+
+if __name__ == "__main__":
+    main()

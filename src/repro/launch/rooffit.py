@@ -1,0 +1,215 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Trip-count-faithful roofline fitting.
+
+XLA's HloCostAnalysis counts `while` (lax.scan) bodies ONCE, so the
+full-config dry-run (which scans layers to keep compile time flat)
+under-reports FLOPs/bytes by ~n_layers.  This tool compiles two SMALL
+UNROLLED variants of each LM cell (L1, L2 layers), fits
+
+    cost(L) = a + b · L
+
+per roofline term, and extrapolates to the real depth.  GNN/BST models
+use Python-level layer loops (already faithful).  kspdg cells run a
+while_loop of relaxations: terms are reported per relaxation and scaled
+by the configured iteration budget.
+
+    PYTHONPATH=src python -m repro.launch.rooffit --out results/rooffit.jsonl
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import extract_roofline
+from repro.models import transformer as T
+from repro.models.common import DTypePolicy, LARGE_POLICY, axis_rules, specs_shardings
+from repro.train.optim import OptConfig, init_opt
+from repro.train.steps import make_train_step
+
+LM_ARCHS = {
+    "starcoder2-3b": ("repro.configs.starcoder2_3b", DTypePolicy()),
+    "deepseek-coder-33b": ("repro.configs.deepseek_coder_33b", DTypePolicy()),
+    "gemma3-27b": ("repro.configs.gemma3_27b", DTypePolicy()),
+    "deepseek-v3-671b": ("repro.configs.deepseek_v3_671b", LARGE_POLICY),
+    "moonshot-v1-16b-a3b": ("repro.configs.moonshot_v1_16b_a3b", DTypePolicy()),
+}
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4_096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+SKIP_LONG = {"deepseek-coder-33b", "moonshot-v1-16b-a3b"}
+
+
+def small_cfg(cfg: T.LMConfig, n_scan: int) -> T.LMConfig:
+    """Same arch, n_scan scanned layers, unrolled, global:local pattern
+    preserved modulo depth."""
+    n_layers = cfg.n_dense_layers + n_scan
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, unroll_layers=True, mtp_depth=0
+    )
+
+
+def lower_cell(cfg, policy, shape_meta, mesh):
+    opt_cfg = OptConfig(moment_dtype=policy.opt_state)
+    p_specs = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg, policy))
+    p_axes = T.lm_axes(cfg)
+    kind = shape_meta["kind"]
+    with axis_rules(mesh):
+        if kind == "train":
+            o_specs = jax.eval_shape(lambda: init_opt(p_specs, opt_cfg))
+            o_axes = {"m": p_axes, "v": p_axes, "step": ()}
+            b_specs = {
+                "tokens": jax.ShapeDtypeStruct(
+                    (shape_meta["batch"], shape_meta["seq"]), jnp.int32
+                ),
+                "loss_mask": jax.ShapeDtypeStruct(
+                    (shape_meta["batch"], shape_meta["seq"]), jnp.float32
+                ),
+            }
+            b_axes = {"tokens": ("batch", "seq"), "loss_mask": ("batch", "seq")}
+            step = make_train_step(
+                functools.partial(lambda p, b, _c: T.lm_loss(p, b, _c), _c=cfg),
+                opt_cfg,
+            )
+            specs, axes = (p_specs, o_specs, b_specs), (p_axes, o_axes, b_axes)
+        elif kind == "prefill":
+            step = functools.partial(
+                lambda p, t, _c: T.lm_prefill(p, t, _c), _c=cfg
+            )
+            specs = (
+                p_specs,
+                jax.ShapeDtypeStruct(
+                    (shape_meta["batch"], shape_meta["seq"]), jnp.int32
+                ),
+            )
+            axes = (p_axes, ("batch", "seq"))
+        else:
+            cache_len = shape_meta["seq"]
+            if cfg.window is not None and cfg.global_every is None:
+                cache_len = min(cache_len, cfg.window)
+            c_specs = T.cache_spec(cfg, shape_meta["batch"], cache_len)
+            c_axes = T.cache_axes(cfg)
+            step = functools.partial(
+                lambda p, c, t, pos, _c: T.lm_decode_step(p, c, t, pos, _c),
+                _c=cfg,
+            )
+            specs = (
+                p_specs, c_specs,
+                jax.ShapeDtypeStruct((shape_meta["batch"], 1), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+            axes = (p_axes, c_axes, ("batch", None), ())
+        in_sh = tuple(
+            specs_shardings(s, a, mesh) for s, a in zip(specs, axes)
+        )
+        fn = step
+        compiled = (
+            jax.jit((lambda *a: fn(*a)), in_shardings=in_sh)
+            .lower(*specs)
+            .compile()
+        )
+    return extract_roofline(compiled, mesh.devices.size)
+
+
+def fit_arch_shape(arch, shape, mesh, l1=1, l2=3):
+    mod_name, policy = LM_ARCHS[arch]
+    import importlib
+
+    cfg0 = importlib.import_module(mod_name).CFG
+    # preserve the local:global ratio at small depth (gemma3: 1 global per
+    # `global_every`) — use multiples of the period where possible
+    if cfg0.global_every is not None:
+        l1, l2 = cfg0.global_every, 2 * cfg0.global_every
+    meta = SHAPES[shape]
+    r1 = lower_cell(small_cfg(cfg0, l1), policy, meta, mesh)
+    r2 = lower_cell(small_cfg(cfg0, l2), policy, meta, mesh)
+    L_full = cfg0.n_scan_layers
+
+    def extrap(v1, v2):
+        b = (v2 - v1) / (l2 - l1)
+        a = v1 - b * l1
+        return max(0.0, a + b * L_full)
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "l1": l1, "l2": l2, "L_full": L_full,
+        "flops": extrap(r1.flops, r2.flops),
+        "hbm_bytes": extrap(r1.hbm_bytes, r2.hbm_bytes),
+        "coll_bytes": extrap(r1.coll_bytes, r2.coll_bytes),
+        "n_devices": mesh.devices.size,
+        "points": {
+            f"L{l1}": r1.as_dict(), f"L{l2}": r2.as_dict(),
+        },
+        "mtp_note": "MTP head excluded from fit (constant-depth term)",
+    }
+    from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+    rec["t_compute_s"] = rec["flops"] / PEAK_FLOPS
+    rec["t_memory_s"] = rec["hbm_bytes"] / HBM_BW
+    rec["t_collective_s"] = rec["coll_bytes"] / ICI_BW
+    terms = {
+        "compute": rec["t_compute_s"],
+        "memory": rec["t_memory_s"],
+        "collective": rec["t_collective_s"],
+    }
+    rec["dominant"] = max(terms, key=terms.get)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="results/rooffit.jsonl")
+    args = ap.parse_args()
+    archs = args.arch or list(LM_ARCHS)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(make_production_mesh(multi_pod=False))
+    if args.mesh in ("multi", "both"):
+        meshes.append(make_production_mesh(multi_pod=True))
+    out = open(args.out, "a")
+    for arch in archs:
+        for shape in (args.shape or list(SHAPES)):
+            if shape == "long_500k" and arch in SKIP_LONG:
+                continue
+            for mesh in meshes:
+                try:
+                    rec = fit_arch_shape(arch, shape, mesh)
+                    print(
+                        f"FIT {arch}×{shape} {rec['mesh']} "
+                        f"Tc={rec['t_compute_s']:.3e} "
+                        f"Tm={rec['t_memory_s']:.3e} "
+                        f"Tcoll={rec['t_collective_s']:.3e} "
+                        f"dom={rec['dominant']}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                        "error": f"{type(e).__name__}: {e}"[:300],
+                    }
+                    print(f"ERR {arch}×{shape} {rec['error'][:100]}", flush=True)
+                out.write(json.dumps(rec) + "\n")
+                out.flush()
+    out.close()
+
+
+if __name__ == "__main__":
+    main()

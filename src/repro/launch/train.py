@@ -1,0 +1,161 @@
+"""Training driver: any registered arch, any mesh, fault-tolerant.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --smoke             # reduced config, CPU-sized
+    PYTHONPATH=src python -m repro.launch.train --arch gin-tu --steps 50
+
+Features exercised end-to-end: deterministic restartable data pipeline,
+AdamW + clip + cosine schedule, periodic async checkpointing, resume
+(--resume picks up the latest step and the pipeline continues exactly
+where it left off).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.configs.base import all_archs
+from repro.train.optim import OptConfig, init_opt
+from repro.train.steps import make_train_step
+
+
+def _smoke_setup(arch_name: str):
+    """(init_fn, loss_fn, pipeline) for the reduced config of an arch."""
+    import functools
+
+    archs = all_archs()
+    arch = archs[arch_name]
+    if arch.family == "lm":
+        import repro.configs as C
+        from repro.data.pipeline import TokenPipeline
+        from repro.models import transformer as T
+
+        mod = {
+            "starcoder2-3b": C.starcoder2_3b,
+            "deepseek-coder-33b": C.deepseek_coder_33b,
+            "gemma3-27b": C.gemma3_27b,
+            "deepseek-v3-671b": C.deepseek_v3_671b,
+            "moonshot-v1-16b-a3b": C.moonshot_v1_16b_a3b,
+        }[arch_name]
+        cfg = mod.SMOKE
+        pipe = TokenPipeline(vocab=cfg.vocab, batch=4, seq_len=64)
+        from repro.models.common import DEFAULT_POLICY
+
+        return (
+            lambda key: T.init_lm(key, cfg, DEFAULT_POLICY),
+            functools.partial(lambda p, b, _c: T.lm_loss(p, b, _c), _c=cfg),
+            pipe.batch_at,
+        )
+    if arch.family == "gnn":
+        import dataclasses
+
+        from repro.configs import gnn_archs
+        from repro.data import pipeline as dp
+        from repro.models import gnn as G
+
+        base = {
+            "dimenet": gnn_archs.DIMENET,
+            "meshgraphnet": gnn_archs.MESHGRAPHNET,
+            "graphsage-reddit": gnn_archs.GRAPHSAGE,
+            "gin-tu": gnn_archs.GIN,
+        }
+        cfg0 = {
+            "dimenet": G.GNNConfig("dimenet", "dimenet", 2, 32, task="graph_reg"),
+            "meshgraphnet": G.GNNConfig(
+                "mgn", "mgn", 3, 32, in_dim=8, out_dim=3, task="node_reg"
+            ),
+            "graphsage-reddit": G.GNNConfig(
+                "sage", "sage", 2, 32, in_dim=12, out_dim=5, aggregator="mean"
+            ),
+            "gin-tu": G.GNNConfig("gin", "gin", 3, 32, in_dim=12, out_dim=5),
+        }[arch_name]
+
+        def batch_at(step):
+            rng = np.random.default_rng(step)
+            if cfg0.kind == "dimenet":
+                return dp.molecule_batch(4, 8, 12, seed=step)
+            b = dp.random_gnn_graph(
+                50, 100, cfg0.in_dim, cfg0.out_dim, seed=step,
+                edge_feat_dim=4 if cfg0.kind == "mgn" else 0,
+            )
+            if cfg0.kind == "mgn":
+                b["labels"] = rng.normal(size=(50, 3)).astype(np.float32)
+            return b
+
+        import functools
+
+        return (
+            lambda key: G.init_gnn(key, cfg0),
+            functools.partial(lambda p, b, _c: G.gnn_loss(p, b, _c), _c=cfg0),
+            batch_at,
+        )
+    if arch.family == "recsys":
+        import functools
+
+        from repro.configs.bst_arch import SMOKE as cfg
+        from repro.data.pipeline import ClickStream
+        from repro.models import bst as B
+
+        pipe = ClickStream(
+            n_items=cfg.n_items, n_profile=cfg.n_profile, seq_len=cfg.seq_len,
+            batch=16, bag_nnz=cfg.bag_nnz_per_row, n_dense=cfg.n_dense,
+        )
+        return (
+            lambda key: B.init_bst(key, cfg),
+            functools.partial(lambda p, b, _c: B.bst_loss(p, b, _c), _c=cfg),
+            pipe.batch_at,
+        )
+    raise ValueError(f"no training path for family {arch.family}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    init_fn, loss_fn, batch_at = _smoke_setup(args.arch)
+    opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=5, decay_steps=args.steps)
+    params = init_fn(jax.random.PRNGKey(0))
+    opt = init_opt(params, opt_cfg)
+    start = 0
+    ck = Checkpointer(f"{args.ckpt_dir}/{args.arch}")
+    if args.resume and ck.latest_step() is not None:
+        start, state = ck.restore()
+        params, opt = state["params"], state["opt"]
+        opt["step"] = jnp.asarray(opt["step"])
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(loss_fn, opt_cfg))
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in batch_at(step).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(
+                f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"lr {float(metrics['lr']):.2e} "
+                f"({(time.time() - t0):.1f}s)",
+                flush=True,
+            )
+        if (step + 1) % args.ckpt_every == 0:
+            ck.save(step + 1, {"params": params, "opt": opt}, blocking=False)
+    ck.wait()
+    ck.save(args.steps, {"params": params, "opt": opt}, blocking=True)
+    print(f"done: {args.steps} steps, checkpoints in {ck.dir}")
+
+
+if __name__ == "__main__":
+    main()

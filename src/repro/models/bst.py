@@ -1,0 +1,295 @@
+"""BST — Behavior Sequence Transformer (Alibaba, arXiv:1905.06874).
+
+Huge sparse embedding tables → transformer over the user's behavior
+sequence (+ target item) → MLP → CTR logit.
+
+The embedding LOOKUP is the hot path.  JAX has no native EmbeddingBag:
+we implement it with ``jnp.take`` + ``jax.ops.segment_sum`` over a ragged
+(values, row-segment) representation — part of the system, not a stub.
+Tables are row-sharded over the 'model' mesh axis (logical axis 'rows').
+
+`retrieval_cand` scores one user against 10^6 candidates as a single
+batched dot — user tower runs once, candidates come straight from the
+(sharded) item table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import layer_norm, normal_init, with_logical
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: tuple = (1024, 512, 256)
+    n_items: int = 10_000_000
+    n_profile: int = 1_000_000     # user-profile categorical vocab
+    bag_nnz_per_row: int = 32      # padded multi-hot ids per example
+    n_dense: int = 16              # dense "other features"
+    d_ff: int = 128                # transformer ffn
+    compute_dtype: str = "f32"     # "bf16": §Perf H-B3 activation dtype
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        tr = self.n_blocks * (4 * d * d + 2 * d * self.d_ff + 4 * d)
+        mlp_in = (self.seq_len + 1) * d + d + self.n_dense
+        dims = (mlp_in,) + self.mlp + (1,)
+        mlp = sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return int(
+            self.n_items * d
+            + self.n_profile * d
+            + (self.seq_len + 1) * d
+            + tr
+            + mlp
+        )
+
+
+def init_bst(key, cfg: BSTConfig):
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 8 + 4 * cfg.n_blocks)
+    params = {
+        "item_table": normal_init(ks[0], (cfg.n_items, d), jnp.float32, scale=0.05),
+        "profile_table": normal_init(
+            ks[1], (cfg.n_profile, d), jnp.float32, scale=0.05
+        ),
+        "pos_embed": normal_init(ks[2], (cfg.seq_len + 1, d), jnp.float32, scale=0.05),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        k = jax.random.split(ks[3 + i], 8)
+        params["blocks"].append(
+            {
+                "wq": normal_init(k[0], (d, d), jnp.float32),
+                "wk": normal_init(k[1], (d, d), jnp.float32),
+                "wv": normal_init(k[2], (d, d), jnp.float32),
+                "wo": normal_init(k[3], (d, d), jnp.float32),
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "w1": normal_init(k[4], (d, cfg.d_ff), jnp.float32),
+                "w2": normal_init(k[5], (cfg.d_ff, d), jnp.float32),
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            }
+        )
+    mlp_in = (cfg.seq_len + 1) * d + d + cfg.n_dense
+    dims = (mlp_in,) + cfg.mlp + (1,)
+    params["mlp"] = [
+        {
+            "w": normal_init(k, (a, b), jnp.float32),
+            "b": jnp.zeros((b,), jnp.float32),
+        }
+        for k, a, b in zip(jax.random.split(ks[-1], len(dims) - 1), dims[:-1], dims[1:])
+    ]
+    return params
+
+
+def bst_axes(params):
+    """Embedding tables row-sharded over 'model'; the rest replicated."""
+    axes = jax.tree.map(lambda _: (), params)
+    axes["item_table"] = ("rows", "feat")
+    axes["profile_table"] = ("rows", "feat")
+    return axes
+
+
+def embedding_bag(table, ids, segments, n_rows, combiner="sum"):
+    """EmbeddingBag: jnp.take + segment_sum (the missing-JAX-op substrate).
+
+    ids [NNZ] int32 (0 = padding), segments [NNZ] int32 row ids.
+    """
+    emb = jnp.take(table, ids, axis=0)  # gather from (row-sharded) table
+    emb = emb * (ids > 0)[:, None]  # padding id contributes 0
+    out = jax.ops.segment_sum(emb, segments, num_segments=n_rows)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(
+            (ids > 0).astype(jnp.float32), segments, num_segments=n_rows
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _cdt(cfg):
+    return jnp.bfloat16 if cfg.compute_dtype == "bf16" else jnp.float32
+
+
+def _cast_net(p, cfg):
+    dt = _cdt(cfg)
+    return jax.tree.map(
+        lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, p
+    )
+
+
+def _transformer_block(x, p, cfg: BSTConfig):
+    B, S, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = (x @ p["wq"]).reshape(B, S, h, hd)
+    k = (x @ p["wk"]).reshape(B, S, h, hd)
+    v = (x @ p["wv"]).reshape(B, S, h, hd)
+    s = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(hd)
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", a, v).reshape(B, S, d)
+    x = layer_norm(x + o @ p["wo"], p["ln1"]["g"], p["ln1"]["b"])
+    f = jax.nn.relu(x @ p["w1"]) @ p["w2"]
+    return layer_norm(x + f, p["ln2"]["g"], p["ln2"]["b"])
+
+
+def bst_logits(params, batch, cfg: BSTConfig):
+    """batch: hist [B,seq_len] i32, target [B] i32, bag_ids/bag_seg [B*nnz],
+    dense [B,n_dense] → CTR logits [B]."""
+    hist = batch["hist"]
+    target = batch["target"]
+    B = hist.shape[0]
+    seq_ids = jnp.concatenate([hist, target[:, None]], axis=1)  # [B, S+1]
+    x = jnp.take(params["item_table"], seq_ids, axis=0)
+    x = x + params["pos_embed"][None, :, :]
+    x = with_logical(x, ("batch", "seq", "feat"))
+    for p in params["blocks"]:
+        x = _transformer_block(x, p, cfg)
+    seq_flat = x.reshape(B, -1)
+    prof = embedding_bag(
+        params["profile_table"], batch["bag_ids"], batch["bag_seg"], B
+    )
+    feat = jnp.concatenate([seq_flat, prof, batch["dense"]], axis=-1)
+    feat = with_logical(feat, ("batch", "feat"))
+    h = feat
+    for i, l in enumerate(params["mlp"]):
+        h = h @ l["w"] + l["b"]
+        if i < len(params["mlp"]) - 1:
+            h = jax.nn.leaky_relu(h)
+    return h[:, 0]
+
+
+def bst_loss(params, batch, cfg: BSTConfig):
+    logits = bst_logits(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"loss": loss}
+
+
+def bst_serve(params, batch, cfg: BSTConfig):
+    """Online inference: CTR probabilities [B]."""
+    return jax.nn.sigmoid(bst_logits(params, batch, cfg))
+
+
+# ---------------------------------------------------------------------------
+# §Perf H-B1: sparse-table training step
+# ---------------------------------------------------------------------------
+# The dense AdamW update streams p/m/v over the full 10^7-row tables every
+# step, although a batch touches ≤ B·(seq+1+nnz) rows.  The sparse step
+# (industry-standard TBE/rowwise-Adagrad) differentiates w.r.t. the
+# GATHERED rows and scatter-updates only those, with a rowwise Adagrad
+# accumulator ([rows] instead of m/v [rows, dim]).
+def init_bst_sparse_opt(params):
+    return {
+        "item_acc": jnp.zeros((params["item_table"].shape[0],), jnp.float32),
+        "profile_acc": jnp.zeros(
+            (params["profile_table"].shape[0],), jnp.float32
+        ),
+    }
+
+
+def _bst_logits_from_gathered(net, seq_emb, prof_sum, batch, cfg: BSTConfig):
+    B = seq_emb.shape[0]
+    dt = _cdt(cfg)
+    net = _cast_net(net, cfg)
+    seq_emb = seq_emb.astype(dt)
+    prof_sum = prof_sum.astype(dt)
+    batch = dict(batch, dense=batch["dense"].astype(dt))
+    x = seq_emb + net["pos_embed"][None, :, :]
+    x = with_logical(x, ("batch", "seq", "feat"))
+    for p in net["blocks"]:
+        x = _transformer_block(x, p, cfg)
+    feat = jnp.concatenate(
+        [x.reshape(B, -1), prof_sum, batch["dense"]], axis=-1
+    )
+    h = feat
+    for i, l in enumerate(net["mlp"]):
+        h = h @ l["w"] + l["b"]
+        if i < len(net["mlp"]) - 1:
+            h = jax.nn.leaky_relu(h)
+    return h[:, 0].astype(jnp.float32)
+
+
+def bst_sparse_train_step(params, table_opt, net_opt, batch, cfg: BSTConfig,
+                          opt_cfg, lr_table: float = 0.05):
+    """(params, table_opt, net_opt, batch) → updated state + metrics."""
+    from repro.train.optim import adamw_update
+
+    hist, target = batch["hist"], batch["target"]
+    B = hist.shape[0]
+    seq_ids = jnp.concatenate([hist, target[:, None]], axis=1)  # [B,S+1]
+    net = {k: v for k, v in params.items()
+           if k not in ("item_table", "profile_table")}
+    seq_emb0 = jnp.take(params["item_table"], seq_ids, axis=0)
+    prof_emb0 = jnp.take(params["profile_table"], batch["bag_ids"], axis=0)
+
+    def loss_fn(net_p, seq_emb, prof_emb):
+        mask = (batch["bag_ids"] > 0)[:, None]
+        prof_sum = jax.ops.segment_sum(
+            prof_emb * mask, batch["bag_seg"], num_segments=B
+        )
+        logits = _bst_logits_from_gathered(net_p, seq_emb, prof_sum, batch, cfg)
+        y = batch["labels"].astype(jnp.float32)
+        loss = jnp.mean(
+            jnp.maximum(logits, 0) - logits * y
+            + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        )
+        return loss, {"loss": loss}
+
+    (loss, metrics), (g_net, g_seq, g_prof) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1, 2), has_aux=True
+    )(net, seq_emb0, prof_emb0)
+
+    # dense params: AdamW as usual
+    new_net, new_net_opt, opt_metrics = adamw_update(
+        g_net, net_opt, net, opt_cfg
+    )
+    # tables: rowwise Adagrad on touched rows only
+    def sparse_update(table, acc, ids_flat, g_flat):
+        row_g2 = jnp.mean(jnp.square(g_flat), axis=-1)  # [nnz]
+        acc = acc.at[ids_flat].add(row_g2)
+        scale = lr_table * jax.lax.rsqrt(acc[ids_flat] + 1e-8)
+        table = table.at[ids_flat].add(-scale[:, None] * g_flat)
+        return table, acc
+
+    item_t, item_a = sparse_update(
+        params["item_table"], table_opt["item_acc"],
+        seq_ids.reshape(-1), g_seq.reshape(-1, cfg.embed_dim),
+    )
+    prof_t, prof_a = sparse_update(
+        params["profile_table"], table_opt["profile_acc"],
+        batch["bag_ids"], g_prof,
+    )
+    new_params = dict(new_net, item_table=item_t, profile_table=prof_t)
+    new_table_opt = {"item_acc": item_a, "profile_acc": prof_a}
+    return new_params, new_table_opt, new_net_opt, dict(metrics, **opt_metrics)
+
+
+def bst_retrieval(params, batch, cfg: BSTConfig):
+    """Score one user against `n_candidates` items: ONE batched dot.
+
+    batch: hist [1, seq_len], bag_ids/bag_seg, dense [1,n_dense],
+    candidates [C] i32 → scores [C]."""
+    hist = batch["hist"]
+    x = jnp.take(params["item_table"], hist, axis=0)
+    x = x + params["pos_embed"][None, : hist.shape[1], :]
+    for p in params["blocks"]:
+        x = _transformer_block(x, p, cfg)
+    user = jnp.mean(x, axis=1)  # [1, d] pooled user tower
+    prof = embedding_bag(
+        params["profile_table"], batch["bag_ids"], batch["bag_seg"], 1
+    )
+    user = user + prof  # cheap feature fusion for the retrieval tower
+    cand = jnp.take(params["item_table"], batch["candidates"], axis=0)  # [C,d]
+    cand = with_logical(cand, ("candidates", "feat"))
+    return (cand @ user[0]).astype(jnp.float32)  # [C]

@@ -1,0 +1,231 @@
+"""Shared model substrate: logical-axis sharding, norms, init, dtypes.
+
+Sharding follows the MaxText-style *logical axis* pattern: every param
+carries a tuple of logical axis names; a rules dict maps logical names to
+mesh axes.  Changing the parallelism strategy (the §Perf hillclimb lever)
+means editing rules, never model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical axis rules
+# ---------------------------------------------------------------------------
+# 'embed' (d_model) is the FSDP axis; 'heads'/'mlp'/'vocab'/'experts' are the
+# tensor/expert-parallel axes; 'batch' is pure data parallel.
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "embed": "data",           # FSDP: params gathered per-layer at use
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "vocab_tbl": "model",      # input embedding table rows
+    "embed_tbl": "data",       # input embedding table columns (FSDP)
+    "experts": "model",
+    "expert_mlp": None,
+    "seq": None,
+    "kv_seq": "model",         # decode KV caches: sequence-sharded
+    "head_dim": None,
+    "layers": None,
+    "q_lora": None,
+    "kv_lora": None,
+    # GNN / recsys / KSP logical axes
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    "feat": None,
+    "hidden": "model",
+    "rows": "model",           # embedding-table rows
+    "candidates": ("pod", "data"),
+    "problems": ("pod", "data"),
+    # subgraph slabs have no tensor-parallel dimension: shard them over
+    # EVERY mesh axis (§Perf H-C0: 16x fewer slab bytes per device than
+    # ('pod','data') alone)
+    "subgraphs": ("pod", "data", "model"),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh = None
+        self.rules = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, rules: dict | None = None):
+    """Activate (mesh, rules) for logical sharding constraints."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def _resolve(axes: tuple, rules: dict, mesh) -> P:
+    """Logical axes → PartitionSpec, dropping mesh axes absent from mesh."""
+    names = set(mesh.axis_names) if mesh is not None else set()
+
+    def fix(a):
+        r = rules.get(a)
+        if r is None:
+            return None
+        if isinstance(r, (tuple, list)):
+            kept = tuple(x for x in r if x in names)
+            return kept if kept else None
+        return r if r in names else None
+
+    used: set = set()
+    out = []
+    for a in axes:
+        r = fix(a)
+        # a mesh axis may appear only once per spec; later dims replicate
+        flat = r if isinstance(r, tuple) else (r,)
+        if r is not None and any(x in used for x in flat if x):
+            r = None
+        if r is not None:
+            used.update(x for x in flat if x)
+        out.append(r)
+    return P(*out)
+
+
+def logical_pspec(axes: tuple, mesh=None, rules: dict | None = None) -> P:
+    mesh = mesh if mesh is not None else _CTX.mesh
+    rules = dict(DEFAULT_RULES, **(rules or {})) if rules else _CTX.rules
+    return _resolve(axes, rules, mesh)
+
+
+def with_logical(x: jax.Array, axes: tuple) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = _resolve(axes, _CTX.rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(axes_tree, mesh, rules: dict | None = None):
+    """Mirror an axes pytree into NamedShardings (for jit in_shardings)."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, _resolve(axes, rules, mesh)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def _axis_size(mesh, r) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(r, tuple):
+        n = 1
+        for x in r:
+            n *= sizes[x]
+        return n
+    return sizes[r]
+
+
+def specs_shardings(specs_tree, axes_tree, mesh, rules: dict | None = None):
+    """NamedShardings for jit arguments, dropping (or shrinking) the
+    sharding of any dimension whose size is not divisible by the mapped
+    mesh-axis product — e.g. batch=1 decode stays replicated over 'data'
+    while its KV cache still shards over 'model'."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+
+    def resolve(spec, axes):
+        base = _resolve(tuple(axes), rules, mesh)
+        fixed = []
+        for dim, r in zip(spec.shape, tuple(base) + (None,) * (len(spec.shape) - len(base))):
+            if r is None:
+                fixed.append(None)
+                continue
+            cand = r if isinstance(r, tuple) else (r,)
+            # greedily drop trailing axes until divisible
+            while cand and dim % _axis_size(mesh, tuple(cand)) != 0:
+                cand = cand[:-1]
+            fixed.append(tuple(cand) if len(cand) > 1 else (cand[0] if cand else None))
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(resolve, specs_tree, axes_tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param: Any = jnp.float32
+    compute: Any = jnp.bfloat16
+    opt_state: Any = jnp.float32
+
+
+# large-model policy for dry-runs at 671B scale: bf16 master + bf16 moments
+# (a recorded distributed-training trick; see DESIGN.md §7)
+LARGE_POLICY = DTypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.bfloat16)
+DEFAULT_POLICY = DTypePolicy()
+
+
+# ---------------------------------------------------------------------------
+# initializers / layers (pure functions over param pytrees)
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(1, fan_in))
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(
+        dtype
+    )
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def count_params(params) -> int:
+    return int(
+        sum(np.prod(x.shape) for x in jax.tree.leaves(params) if hasattr(x, "shape"))
+    )
+
+
+def tree_bytes(params) -> int:
+    return int(
+        sum(
+            np.prod(x.shape) * x.dtype.itemsize
+            for x in jax.tree.leaves(params)
+            if hasattr(x, "shape")
+        )
+    )

@@ -1,0 +1,1004 @@
+"""Decoder-only LM family covering the five assigned architectures.
+
+One config-driven implementation provides:
+  * GQA attention with RoPE (starcoder2 / deepseek-coder / gemma3 / moonshot)
+  * sliding-window and periodic local:global attention (starcoder2, gemma3)
+  * MLA — multi-head latent attention with compressed KV cache and
+    weight-absorbed decode (deepseek-v3)
+  * MoE with shared experts + sort-based capacity-bucketed dispatch
+    (deepseek-v3: 256e top-8 + 1 shared; moonshot: 64e top-6 + 2 shared)
+  * MTP — one-depth multi-token-prediction head (deepseek-v3)
+  * chunked (flash-style online-softmax) attention for long sequences
+  * chunked vocab-parallel cross entropy (never materializes [B,S,V])
+
+Everything is pure-function + pytree; sharding is via logical axes
+(models.common).  Layers are scanned (lax.scan) with per-layer remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import DTypePolicy, gelu, normal_init, rms_norm, with_logical
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router: str = "softmax"  # "softmax" (switch-style) | "sigmoid" (dsv3)
+    aux_loss_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    rope_theta: float = 10_000.0
+    # attention pattern: window size per layer; None = full causal.
+    # `global_every` = k means layers (i+1) % k == 0 are full/global
+    # (gemma3's 5:1 local:global), others use `window`.
+    window: int | None = None
+    global_every: int | None = None
+    # MoE: first `n_dense_layers` layers stay dense, rest are MoE
+    moe: MoEConfig | None = None
+    n_dense_layers: int = 0
+    mla: MLAConfig | None = None
+    mtp_depth: int = 0
+    tie_embeddings: bool = False
+    gated_mlp: bool = True   # llama-style silu-gated; starcoder2 uses plain GELU
+    norm_eps: float = 1e-6
+    # execution knobs (hillclimb levers — not architecture)
+    q_chunk: int = 512
+    loss_chunk: int = 512
+    remat: bool = True
+    # unroll the layer loop instead of lax.scan.  Scan keeps compile time
+    # flat for the 62-layer dry-runs; unroll gives trip-count-faithful
+    # cost_analysis (XLA counts while bodies ONCE) — the roofline fit
+    # compiles small unrolled variants and extrapolates (launch/rooffit).
+    unroll_layers: bool = False
+    # grouped-query attention without KV repeat: saves (H/KH)× KV bytes
+    # but measured WORSE on collective-bound prefill when KH < mesh model
+    # size (§Perf H-A2, refuted): the padded kv_heads axis misaligns with
+    # the query-head sharding.  Default: repeat (sharding-aligned).
+    gqa_grouped: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_scan_layers(self) -> int:
+        return self.n_layers - self.n_dense_layers
+
+    def layer_is_global(self) -> np.ndarray:
+        """bool[n_layers]: full-attention layer mask.  Without a
+        local:global pattern, all layers are windowed iff `window` is set
+        (starcoder2) and full otherwise."""
+        if self.global_every is None:
+            return np.full(self.n_layers, self.window is None)
+        idx = np.arange(self.n_layers)
+        return (idx + 1) % self.global_every == 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives MODEL_FLOPS in §Roofline)."""
+        D, F, V, H, KH = self.d_model, self.d_ff, self.vocab, self.n_heads, self.n_kv_heads
+        hd = self.hd
+        if self.mla is not None:
+            m = self.mla
+            attn = (
+                D * m.q_lora_rank
+                + m.q_lora_rank * H * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                + D * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * H * (m.qk_nope_head_dim + m.v_head_dim)
+                + H * m.v_head_dim * D
+                + m.q_lora_rank + m.kv_lora_rank
+            )
+        else:
+            attn = D * H * hd + 2 * D * KH * hd + H * hd * D
+        dense_ffn = (3 if self.gated_mlp else 2) * D * F
+        per_dense = attn + dense_ffn + 2 * D
+        total = self.n_dense_layers * per_dense if self.n_dense_layers else 0
+        if self.moe is not None:
+            e = self.moe
+            moe_ffn = (
+                3 * D * e.d_ff_expert * e.n_experts
+                + e.n_shared * 3 * D * e.d_ff_expert
+                + D * e.n_experts
+            )
+            total += self.n_scan_layers * (attn + moe_ffn + 2 * D)
+        else:
+            total += self.n_scan_layers * per_dense
+        total += V * D  # embed
+        if not self.tie_embeddings:
+            total += V * D
+        total += D  # final norm
+        if self.mtp_depth:
+            total += 2 * D * D + per_dense + D
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        full_moe = 3 * self.d_model * e.d_ff_expert * e.n_experts
+        active_moe = 3 * self.d_model * e.d_ff_expert * e.top_k
+        return int(
+            self.param_count() - self.n_scan_layers * (full_moe - active_moe)
+        )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _attn_init(key, cfg: LMConfig, dt):
+    D, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 8)
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "wq_a": normal_init(ks[0], (D, m.q_lora_rank), dt),
+            "q_norm": jnp.zeros((m.q_lora_rank,), dt),
+            "wq_b": normal_init(ks[1], (m.q_lora_rank, H, qk_dim), dt),
+            "wkv_a": normal_init(
+                ks[2], (D, m.kv_lora_rank + m.qk_rope_head_dim), dt
+            ),
+            "kv_norm": jnp.zeros((m.kv_lora_rank,), dt),
+            "wkv_b": normal_init(
+                ks[3],
+                (m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+                dt,
+            ),
+            "wo": normal_init(ks[4], (H, m.v_head_dim, D), dt),
+        }
+    return {
+        "wq": normal_init(ks[0], (D, H, hd), dt),
+        "wk": normal_init(ks[1], (D, KH, hd), dt),
+        "wv": normal_init(ks[2], (D, KH, hd), dt),
+        "wo": normal_init(ks[3], (H, hd, D), dt),
+    }
+
+
+def _attn_axes(cfg: LMConfig):
+    if cfg.mla is not None:
+        return {
+            "wq_a": ("embed", "q_lora"),
+            "q_norm": ("q_lora",),
+            "wq_b": ("q_lora", "heads", "head_dim"),
+            "wkv_a": ("embed", "kv_lora"),
+            "kv_norm": ("kv_lora",),
+            "wkv_b": ("kv_lora", "heads", "head_dim"),
+            "wo": ("heads", "head_dim", "embed"),
+        }
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def _dense_ffn_init(key, cfg: LMConfig, dt):
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w1": normal_init(k1, (D, F), dt),
+        "w2": normal_init(k3, (F, D), dt),
+    }
+    if cfg.gated_mlp:
+        p["w3"] = normal_init(k2, (D, F), dt)
+    return p
+
+
+def _dense_ffn_axes(cfg):
+    a = {"w1": ("embed", "mlp"), "w2": ("mlp", "embed")}
+    if cfg.gated_mlp:
+        a["w3"] = ("embed", "mlp")
+    return a
+
+
+def _moe_init(key, cfg: LMConfig, dt):
+    D = cfg.d_model
+    e = cfg.moe
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": normal_init(ks[0], (D, e.n_experts), jnp.float32),
+        "w1": normal_init(ks[1], (e.n_experts, D, e.d_ff_expert), dt),
+        "w3": normal_init(ks[2], (e.n_experts, D, e.d_ff_expert), dt),
+        "w2": normal_init(ks[3], (e.n_experts, e.d_ff_expert, D), dt),
+    }
+    if e.n_shared:
+        fs = e.d_ff_expert * e.n_shared
+        p["shared_w1"] = normal_init(ks[4], (D, fs), dt)
+        p["shared_w3"] = normal_init(ks[5], (D, fs), dt)
+        p["shared_w2"] = normal_init(ks[6], (fs, D), dt)
+    return p
+
+
+def _moe_axes(cfg: LMConfig):
+    a = {
+        "router": ("embed", "experts_router"),
+        "w1": ("experts", "embed", "expert_mlp"),
+        "w3": ("experts", "embed", "expert_mlp"),
+        "w2": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.moe.n_shared:
+        a["shared_w1"] = ("embed", "mlp")
+        a["shared_w3"] = ("embed", "mlp")
+        a["shared_w2"] = ("mlp", "embed")
+    return a
+
+
+def _layer_init(key, cfg: LMConfig, moe: bool, dt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "attn": _attn_init(k1, cfg, dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "ffn": _moe_init(k2, cfg, dt) if moe else _dense_ffn_init(k2, cfg, dt),
+    }
+
+
+def _layer_axes(cfg: LMConfig, moe: bool):
+    return {
+        "ln1": ("embed_norm",),
+        "attn": _attn_axes(cfg),
+        "ln2": ("embed_norm",),
+        "ffn": _moe_axes(cfg) if moe else _dense_ffn_axes(cfg),
+    }
+
+
+def init_lm(key, cfg: LMConfig, policy: DTypePolicy):
+    dt = policy.param
+    keys = jax.random.split(key, 8)
+    has_moe = cfg.moe is not None
+    params: dict[str, Any] = {
+        "embed": normal_init(keys[0], (cfg.vocab, cfg.d_model), dt, scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(keys[1], (cfg.d_model, cfg.vocab), dt)
+    if cfg.n_dense_layers:
+        dk = jax.random.split(keys[2], cfg.n_dense_layers)
+        params["dense_layers"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_layer_init(k, cfg, False, dt) for k in dk],
+        )
+    sk = jax.random.split(keys[3], cfg.n_scan_layers)
+    params["layers"] = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_layer_init(k, cfg, has_moe, dt) for k in sk],
+    )
+    if cfg.mtp_depth:
+        k1, k2 = jax.random.split(keys[4])
+        params["mtp"] = {
+            "proj": normal_init(k1, (2 * cfg.d_model, cfg.d_model), dt),
+            "layer": _layer_init(k2, cfg, False, dt),
+            "norm": jnp.zeros((cfg.d_model,), dt),
+        }
+    return params
+
+
+def lm_axes(cfg: LMConfig):
+    has_moe = cfg.moe is not None
+    stack = lambda t: jax.tree.map(  # noqa: E731
+        lambda axes: ("layers",) + axes,
+        t,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    # the input table gets DEDICATED logical axes so its sharding can be
+    # tuned (e.g. replicated for small vocabs) without touching the FSDP
+    # 'embed' axis of the layer weights — a §Perf lever.
+    axes: dict[str, Any] = {
+        "embed": ("vocab_tbl", "embed_tbl"),
+        "final_norm": ("embed_norm",),
+        "layers": stack(_layer_axes(cfg, has_moe)),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    if cfg.n_dense_layers:
+        axes["dense_layers"] = stack(_layer_axes(cfg, False))
+    if cfg.mtp_depth:
+        axes["mtp"] = {
+            "proj": ("embed", "embed_proj"),
+            "layer": _layer_axes(cfg, False),
+            "norm": ("embed_norm",),
+        }
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    )
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (chunked online-softmax; TPU-friendly, flat memory)
+# ---------------------------------------------------------------------------
+def chunked_attention(q, k, v, q_pos, kv_pos, *, window, scale, q_chunk):
+    """Grouped-query chunked attention (online over query chunks).
+
+    q: [B,S,KH,G,dq] — G query heads per KV head; k: [B,T,KH,dq];
+    v: [B,T,KH,dv].  KV is NEVER repeated to the full head count (a 7x
+    KV-bytes saving for GQA archs, §Perf H-A2); `window=None` → causal.
+    """
+    B, S, KH, G, dq = q.shape
+    T = k.shape[1]
+    dv = v.shape[-1]
+    C = min(q_chunk, S)
+    n_chunks = (S + C - 1) // C
+    pad = n_chunks * C - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, pad),), constant_values=-1)
+    qc = q.reshape(B, n_chunks, C, KH, G, dq).transpose(1, 0, 2, 3, 4, 5)
+    pc = q_pos.reshape(n_chunks, C)
+
+    def one_chunk(args):
+        qi, pi = args  # [B,C,KH,G,dq], [C]
+        s = jnp.einsum("bckgd,btkd->bckgt", qi, k) * scale  # [B,C,KH,G,T]
+        mask = pi[None, :, None, None, None] >= kv_pos[None, None, None, None, :]
+        if window is not None:
+            mask &= (
+                pi[None, :, None, None, None]
+                - kv_pos[None, None, None, None, :]
+            ) < window
+        s = jnp.where(mask, s.astype(jnp.float32), -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bckgt,btkd->bckgd", p, v)  # [B,C,KH,G,dv]
+
+    out = jax.lax.map(one_chunk, (qc, pc))  # [n_chunks,B,C,KH,G,dv]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(
+        B, n_chunks * C, KH * G, dv
+    )
+    return out[:, :S]
+
+
+def gqa_attention(x, p, cfg: LMConfig, *, window, positions):
+    """Training/prefill GQA attention; returns [B,S,D]."""
+    B, S, D = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KH
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = with_logical(q, ("batch", "seq", "heads", "head_dim"))
+    if cfg.gqa_grouped:
+        k = with_logical(k, ("batch", "seq", "kv_heads", "head_dim"))
+        v = with_logical(v, ("batch", "seq", "kv_heads", "head_dim"))
+        q = q.reshape(B, S, KH, G, hd)
+    else:  # repeat KV onto the (sharding-aligned) query-head axis
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = with_logical(k, ("batch", "seq", "heads", "head_dim"))
+        v = with_logical(v, ("batch", "seq", "heads", "head_dim"))
+        q = q[:, :, :, None, :]  # G folded into the head axis
+    o = chunked_attention(
+        q, k, v, positions, positions,
+        window=window, scale=1.0 / np.sqrt(hd), q_chunk=cfg.q_chunk,
+    )
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def mla_attention(x, p, cfg: LMConfig, *, window, positions):
+    """Training/prefill MLA attention (expanded form); returns [B,S,D]."""
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_rope = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv, k_rope = jnp.split(ckv_rope, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_norm"])
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # 1 head
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"])
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q_full = with_logical(q_full, ("batch", "seq", "heads", "head_dim"))
+    k = with_logical(k, ("batch", "seq", "heads", "head_dim"))
+    v = with_logical(v, ("batch", "seq", "heads", "head_dim"))
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    o = chunked_attention(
+        q_full[:, :, :, None, :], k, v, positions, positions,
+        window=window, scale=scale, q_chunk=cfg.q_chunk,
+    )
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+def dense_ffn(x, p):
+    if "w3" in p:  # gated (llama-style)
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    else:          # plain GELU MLP (starcoder2/gpt-style)
+        h = gelu(x @ p["w1"])
+    h = with_logical(h, ("batch", "seq", "mlp"))
+    return h @ p["w2"]
+
+
+def moe_ffn(x, p, cfg: LMConfig):
+    """Sort-based capacity-bucketed top-k MoE.  x: [B,S,D] → ([B,S,D], aux)."""
+    e = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32)) @ p["router"].astype(jnp.float32)
+    if e.router == "sigmoid":  # deepseek-v3: sigmoid scores, normalized top-k
+        scores = jax.nn.sigmoid(logits)
+        gate_w, gate_i = jax.lax.top_k(scores, e.top_k)
+        gate_w = gate_w / (jnp.sum(gate_w, -1, keepdims=True) + 1e-20)
+        probs = scores / (jnp.sum(scores, -1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_i = jax.lax.top_k(probs, e.top_k)
+        gate_w = gate_w / (jnp.sum(gate_w, -1, keepdims=True) + 1e-20)
+    # aux load-balance loss (Switch): E * Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(gate_i, e.n_experts).sum(1)).astype(jnp.float32), axis=0
+    )
+    aux = e.n_experts * jnp.sum(me * ce) * e.aux_loss_coef
+
+    C = int(np.ceil(T * e.top_k * e.capacity_factor / e.n_experts))
+    C = max(C, 1)
+    # flatten (token, slot) assignments and sort by expert
+    flat_e = gate_i.reshape(-1)  # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), e.top_k)
+    flat_w = gate_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each assignment within its expert
+    ones = jnp.ones_like(se)
+    pos_in_e = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(se, jnp.arange(e.n_experts))  # [E]
+    pos = pos_in_e - seg_start[se]
+    keep = pos < C
+    slot = se * C + jnp.where(keep, pos, 0)
+    # gather tokens into [E*C, D] buffers (dropped tokens contribute 0)
+    buf = jnp.zeros((e.n_experts * C, D), xt.dtype)
+    buf = buf.at[jnp.where(keep, slot, e.n_experts * C - 1)].add(
+        jnp.where(keep[:, None], xt[st], 0)
+    )
+    buf = buf.reshape(e.n_experts, C, D)
+    buf = with_logical(buf, ("experts", None, "embed"))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w3"]
+    )
+    h = with_logical(h, ("experts", None, "expert_mlp"))
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(
+        e.n_experts * C, D
+    )
+    # scatter back with combine weights
+    contrib = jnp.where(keep[:, None], out_e[slot] * sw[:, None].astype(out_e.dtype), 0)
+    yt = jnp.zeros_like(xt).at[st].add(contrib)
+    y = yt.reshape(B, S, D)
+    if e.n_shared:
+        sh = jax.nn.silu(xt @ p["shared_w1"]) * (xt @ p["shared_w3"])
+        y = y + (sh @ p["shared_w2"]).reshape(B, S, D)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# transformer stack
+# ---------------------------------------------------------------------------
+def _cast_layer(lp, dtype=jnp.bfloat16):
+    """Cast layer params to compute dtype (router stays f32 in moe_ffn)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a, lp
+    )
+
+
+def _layer_fwd(x, lp, cfg: LMConfig, *, is_moe, is_global, positions):
+    lp = _cast_layer(lp)
+    window = None if is_global else cfg.window
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn = mla_attention if cfg.mla is not None else gqa_attention
+    x = x + attn(h, lp["attn"], cfg, window=window, positions=positions)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if is_moe:
+        y, aux = moe_ffn(h, lp["ffn"], cfg)
+    else:
+        y, aux = dense_ffn(h, lp["ffn"]), jnp.float32(0.0)
+    x = with_logical(x + y, ("batch", "seq", "embed_act"))
+    return x, aux
+
+
+def lm_backbone(params, tokens, cfg: LMConfig):
+    """tokens [B,S] → hidden states [B,S,D] (+ aux loss scalar)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = with_logical(x, ("batch", "seq", "embed_act"))
+    aux_total = jnp.float32(0.0)
+
+    is_global_arr = cfg.layer_is_global()
+    has_moe = cfg.moe is not None
+
+    # unrolled leading dense layers (deepseek-v3 / moonshot)
+    if cfg.n_dense_layers:
+        for i in range(cfg.n_dense_layers):
+            lp = jax.tree.map(lambda a, _i=i: a[_i], params["dense_layers"])
+            fwd = functools.partial(
+                _layer_fwd,
+                cfg=cfg,
+                is_moe=False,
+                is_global=bool(is_global_arr[i]),
+                positions=positions,
+            )
+            if cfg.remat:
+                fwd = jax.checkpoint(fwd)
+            x, aux = fwd(x, lp)
+            aux_total += aux
+
+    # scanned remaining layers
+    scan_global_np = is_global_arr[cfg.n_dense_layers :]
+    scan_global = jnp.asarray(scan_global_np)
+    uniform = bool(scan_global_np.all() or not scan_global_np.any())
+
+    if cfg.unroll_layers:
+        for i in range(cfg.n_scan_layers):
+            lp = jax.tree.map(lambda a, _i=i: a[_i], params["layers"])
+            fwd = functools.partial(
+                _layer_fwd, cfg=cfg, is_moe=has_moe,
+                is_global=bool(scan_global_np[i]), positions=positions,
+            )
+            if cfg.remat:
+                fwd = jax.checkpoint(fwd)
+            x, aux = fwd(x, lp)
+            aux_total += aux
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux_total
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        lp, g = xs
+
+        def run(x, lp, is_global):
+            return _layer_fwd(
+                x, lp, cfg, is_moe=has_moe, is_global=is_global,
+                positions=positions,
+            )
+
+        if uniform:
+            x, aux = (
+                jax.checkpoint(functools.partial(run, is_global=bool(is_global_arr[-1])))(x, lp)
+                if cfg.remat
+                else run(x, lp, bool(is_global_arr[-1]))
+            )
+        else:
+            f_local = functools.partial(run, is_global=False)
+            f_global = functools.partial(run, is_global=True)
+            if cfg.remat:
+                f_local = jax.checkpoint(f_local)
+                f_global = jax.checkpoint(f_global)
+            x, aux = jax.lax.cond(g, f_global, f_local, x, lp)
+        return (x, aux_acc + aux), None
+
+    (x, aux_total), _ = jax.lax.scan(
+        body, (x, aux_total), (params["layers"], scan_global)
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def _unembed(params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_ce_loss(h, labels, mask, head, cfg: LMConfig):
+    """Vocab-parallel chunked CE. h:[B,S,D], labels/mask:[B,S] → scalar."""
+    B, S, D = h.shape
+    C = min(cfg.loss_chunk, S)
+    n_chunks = (S + C - 1) // C
+    assert S % C == 0, "loss_chunk must divide seq len"
+    hc = h.reshape(B, n_chunks, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, C).transpose(1, 0, 2)
+    mc = mask.reshape(B, n_chunks, C).transpose(1, 0, 2)
+
+    def one(args):
+        hi, li, mi = args
+        logits = jnp.einsum("bcd,dv->bcv", hi, head).astype(jnp.float32)
+        logits = with_logical(logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return nll.sum(), mi.sum()
+
+    nll, cnt = jax.lax.map(one, (hc, lc, mc))
+    return nll.sum() / jnp.maximum(cnt.sum(), 1.0)
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    """batch: tokens [B,S] int32, loss_mask [B,S]. Next-token CE (+MTP)."""
+    tokens = batch["tokens"]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    h, aux = lm_backbone(params, tokens, cfg)
+    head = _unembed(params, cfg).astype(jnp.bfloat16)
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    m1 = mask * jnp.pad(jnp.ones_like(mask[:, 1:]), ((0, 0), (0, 1)))
+    loss = chunked_ce_loss(h, labels, m1, head, cfg)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp_depth:
+        # MTP-1 (deepseek-v3): h'_t = Layer(Proj([h_t ; Emb(x_{t+1})]));
+        # predict x_{t+2}
+        mp = _cast_layer(params["mtp"])
+        emb_next = params["embed"].astype(jnp.bfloat16)[labels]
+        hcat = jnp.concatenate([h, emb_next], axis=-1)
+        h2 = jnp.einsum("bsd,de->bse", hcat, mp["proj"])
+        h2, _ = _layer_fwd(
+            h2, mp["layer"], cfg, is_moe=False, is_global=True,
+            positions=jnp.arange(tokens.shape[1]),
+        )
+        h2 = rms_norm(h2, mp["norm"], cfg.norm_eps)
+        labels2 = jnp.pad(tokens[:, 2:], ((0, 0), (0, 2)))
+        m2 = mask * jnp.pad(jnp.ones_like(mask[:, 2:]), ((0, 0), (0, 2)))
+        mtp_loss = chunked_ce_loss(h2, labels2, m2, head, cfg)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+def cache_spec(cfg: LMConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs of the per-layer KV cache stack."""
+    L = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct(
+                (L, batch, max_len, m.kv_lora_rank), jnp.bfloat16
+            ),
+            "k_rope": jax.ShapeDtypeStruct(
+                (L, batch, max_len, m.qk_rope_head_dim), jnp.bfloat16
+            ),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(
+            (L, batch, max_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16
+        ),
+        "v": jax.ShapeDtypeStruct(
+            (L, batch, max_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16
+        ),
+    }
+
+
+def cache_axes(cfg: LMConfig):
+    if cfg.mla is not None:
+        return {
+            "ckv": ("layers", "batch", "kv_seq", "kv_lora"),
+            "k_rope": ("layers", "batch", "kv_seq", "head_dim"),
+        }
+    return {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    }
+
+
+def cache_spec_mixed(cfg: LMConfig, batch: int, max_len: int):
+    """Per-layer cache list honouring each layer's attention reach:
+    local layers get ring buffers of `window` slots, global layers get
+    `max_len` (§Perf H-D1 — gemma3's 5:1 pattern keeps only 10/62 big
+    caches).  Requires the unrolled decode path."""
+    is_global = cfg.layer_is_global()
+    out = []
+    for i in range(cfg.n_layers):
+        T = max_len if (is_global[i] or cfg.window is None) else min(
+            max_len, cfg.window
+        )
+        if cfg.mla is not None:
+            m = cfg.mla
+            out.append({
+                "ckv": jax.ShapeDtypeStruct((batch, T, m.kv_lora_rank), jnp.bfloat16),
+                "k_rope": jax.ShapeDtypeStruct(
+                    (batch, T, m.qk_rope_head_dim), jnp.bfloat16
+                ),
+            })
+        else:
+            out.append({
+                "k": jax.ShapeDtypeStruct(
+                    (batch, T, cfg.n_kv_heads, cfg.hd), jnp.bfloat16
+                ),
+                "v": jax.ShapeDtypeStruct(
+                    (batch, T, cfg.n_kv_heads, cfg.hd), jnp.bfloat16
+                ),
+            })
+    return out
+
+
+def cache_axes_mixed(cfg: LMConfig):
+    if cfg.mla is not None:
+        per = {
+            "ckv": ("batch", "kv_seq", "kv_lora"),
+            "k_rope": ("batch", "kv_seq", "head_dim"),
+        }
+    else:
+        per = {
+            "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+        }
+    return [per for _ in range(cfg.n_layers)]
+
+
+def _pos_vec(pos, B):
+    """pos may be a scalar (uniform batch, the dry-run cells) or an int32
+    [B] vector (continuous batching, serve.engine)."""
+    pos = jnp.asarray(pos)
+    return jnp.broadcast_to(jnp.atleast_1d(pos), (B,))
+
+
+def decode_step_gqa(x, lp, cache_l, cfg: LMConfig, *, pos, window):
+    """One GQA decode step for one layer. x [B,1,D] → (x', cache_l').
+    `pos`: scalar or [B] per-slot positions."""
+    lp = _cast_layer(lp)
+    B = x.shape[0]
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ap = lp["attn"]
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    posb = _pos_vec(pos, B)  # [B]
+    posv = posb[:, None]     # [B,1] rope positions
+    q = rope(jnp.einsum("bsd,dhk->bshk", h, ap["wq"]), posv, cfg.rope_theta)
+    k_new = rope(jnp.einsum("bsd,dhk->bshk", h, ap["wk"]), posv, cfg.rope_theta)
+    v_new = jnp.einsum("bsd,dhk->bshk", h, ap["wv"])
+    # ring-buffer cache: slot = pos mod T.  For T = max_len this is a plain
+    # append; for sliding-window archs T = window bounds the cache (the
+    # long_500k memory story for starcoder2).
+    T = cache_l["k"].shape[1]
+    slot = jnp.mod(posb, T)  # [B]
+    barange = jnp.arange(B)
+    k = cache_l["k"].at[barange, slot].set(k_new[:, 0].astype(cache_l["k"].dtype))
+    v = cache_l["v"].at[barange, slot].set(v_new[:, 0].astype(cache_l["v"].dtype))
+    kv_pos = posb[:, None] - jnp.mod(
+        posb[:, None] - jnp.arange(T)[None, :], T
+    )  # [B,T] absolute position stored in each slot
+    rep = H // KH
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bshk,bthk->bhst", q, kr)[:, :, 0, :] / np.sqrt(hd)  # [B,H,T]
+    valid = (kv_pos <= posb[:, None]) & (kv_pos >= 0)  # [B,T]
+    if window is not None:
+        valid &= (posb[:, None] - kv_pos) < window
+    s = jnp.where(valid[:, None, :], s.astype(jnp.float32), -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(vr.dtype)
+    o = jnp.einsum("bht,bthk->bhk", p, vr)[:, None]  # [B,1,H,hd]
+    x = x + jnp.einsum("bshk,hkd->bsd", o, ap["wo"])
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None and "router" in lp["ffn"]:
+        y, _ = moe_ffn(h2, lp["ffn"], cfg)
+    else:
+        y = dense_ffn(h2, lp["ffn"])
+    return x + y, {"k": k, "v": v}
+
+
+def decode_step_mla(x, lp, cache_l, cfg: LMConfig, *, pos, window):
+    """MLA decode with weight absorption: scores in latent space; the cache
+    holds only (ckv, k_rope) — the paper-exact compressed-KV trick."""
+    lp = _cast_layer(lp)
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    ap = lp["attn"]
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    posb = _pos_vec(pos, B)
+    posv = posb[:, None]
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", h, ap["wq_a"]), ap["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, ap["wq_b"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = rope(q_rope, posv, cfg.rope_theta)
+    ckv_rope = jnp.einsum("bsd,dr->bsr", h, ap["wkv_a"])
+    ckv_new, kr_new = jnp.split(ckv_rope, [m.kv_lora_rank], axis=-1)
+    ckv_new = rms_norm(ckv_new, ap["kv_norm"])
+    kr_new = rope(kr_new[:, :, None, :], posv, cfg.rope_theta)[:, :, 0, :]
+    T = cache_l["ckv"].shape[1]
+    slot = jnp.mod(posb, T)
+    barange = jnp.arange(B)
+    ckv = cache_l["ckv"].at[barange, slot].set(
+        ckv_new[:, 0].astype(cache_l["ckv"].dtype)
+    )
+    k_rope = cache_l["k_rope"].at[barange, slot].set(
+        kr_new[:, 0].astype(cache_l["k_rope"].dtype)
+    )
+    # absorption: q_nope^T W_kv^K → latent queries
+    wk = ap["wkv_b"][..., : m.qk_nope_head_dim]  # [r, H, nope]
+    wv = ap["wkv_b"][..., m.qk_nope_head_dim :]  # [r, H, v]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk)  # [B,1,H,r]
+    s = jnp.einsum("bshr,btr->bhst", q_lat, ckv)[:, :, 0, :]
+    s = s + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)[:, :, 0, :]
+    s = s / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    kv_pos = posb[:, None] - jnp.mod(
+        posb[:, None] - jnp.arange(T)[None, :], T
+    )
+    valid = (kv_pos <= posb[:, None]) & (kv_pos >= 0)
+    if window is not None:
+        valid &= (posb[:, None] - kv_pos) < window
+    s = jnp.where(valid[:, None, :], s.astype(jnp.float32), -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(ckv.dtype)
+    o_lat = jnp.einsum("bht,btr->bhr", p, ckv)  # [B,H,r]
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, wv)[:, None]  # [B,1,H,v]
+    x = x + jnp.einsum("bshk,hkd->bsd", o, ap["wo"])
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None and "router" in lp["ffn"]:
+        y, _ = moe_ffn(h2, lp["ffn"], cfg)
+    else:
+        y = dense_ffn(h2, lp["ffn"])
+    return x + y, {"ckv": ckv, "k_rope": k_rope}
+
+
+def lm_decode_step(params, cache, tokens, pos, cfg: LMConfig):
+    """serve_step: one new token against a KV cache.
+
+    tokens [B,1] int32, pos: scalar or [B] int32 (current length);
+    cache: stacked pytree (scan path) OR per-layer list from
+    cache_spec_mixed (unrolled mixed-window path); returns
+    (logits [B,vocab], new cache)."""
+    if isinstance(cache, list):
+        return _lm_decode_step_mixed(params, cache, tokens, pos, cfg)
+    B = tokens.shape[0]
+    x = params["embed"].astype(jnp.bfloat16)[tokens]  # [B,1,D]
+    is_global_arr = cfg.layer_is_global()
+    step = decode_step_mla if cfg.mla is not None else decode_step_gqa
+    has_moe = cfg.moe is not None
+    n_dense = cfg.n_dense_layers
+
+    new_cache = jax.tree.map(lambda c: c, cache)
+    li = 0
+    # dense prefix (unrolled)
+    for i in range(n_dense):
+        lp = jax.tree.map(lambda a, _i=i: a[_i], params["dense_layers"])
+        cl = jax.tree.map(lambda c, _i=li: c[_i], cache)
+        window = None if is_global_arr[i] else cfg.window
+        x, cl = step(x, lp, cl, cfg, pos=pos, window=window)
+        new_cache = jax.tree.map(
+            lambda nc, c, _i=li: jax.lax.dynamic_update_index_in_dim(nc, c.astype(nc.dtype), _i, 0),
+            new_cache, cl,
+        )
+        li += 1
+
+    if cfg.unroll_layers:
+        for i in range(n_dense, cfg.n_layers):
+            lp = jax.tree.map(
+                lambda a, _i=i - n_dense: a[_i], params["layers"]
+            )
+            cl = jax.tree.map(lambda c, _i=i: c[_i], cache)
+            window = None if is_global_arr[i] else cfg.window
+            x, cl = step(x, lp, cl, cfg, pos=pos, window=window)
+            new_cache = jax.tree.map(
+                lambda nc, c, _i=i: jax.lax.dynamic_update_index_in_dim(
+                    nc, c.astype(nc.dtype), _i, 0
+                ),
+                new_cache, cl,
+            )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = _unembed(params, cfg).astype(jnp.bfloat16)
+        logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+        logits = with_logical(logits, ("batch", "vocab"))
+        return logits, new_cache
+
+    scan_global = jnp.asarray(is_global_arr[n_dense:])
+    scan_cache = jax.tree.map(lambda c: c[n_dense:], cache)
+
+    def body(x, xs):
+        lp, cl, g = xs
+
+        def run(x, lp, cl, is_global):
+            window = None if is_global else cfg.window
+            return step(x, lp, cl, cfg, pos=pos, window=window)
+
+        if cfg.global_every is None:
+            x, cl = run(x, lp, cl, True if cfg.window is None else False)
+        else:
+            x, cl = jax.lax.cond(
+                g,
+                functools.partial(run, is_global=True),
+                functools.partial(run, is_global=False),
+                x, lp, cl,
+            )
+        return x, cl
+
+    x, upd = jax.lax.scan(body, x, (params["layers"], scan_cache, scan_global))
+    new_cache = jax.tree.map(
+        lambda nc, u, _nd=n_dense: jax.lax.dynamic_update_slice(
+            nc, u.astype(nc.dtype), (_nd,) + (0,) * (nc.ndim - 1)
+        ),
+        new_cache, upd,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = _unembed(params, cfg).astype(jnp.bfloat16)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    logits = with_logical(logits, ("batch", "vocab"))
+    return logits, new_cache
+
+
+def _lm_decode_step_mixed(params, cache, tokens, pos, cfg: LMConfig):
+    """Unrolled decode over a per-layer cache LIST (mixed ring sizes —
+    local layers keep `window` slots, global layers keep the full
+    context).  §Perf H-D1."""
+    is_global_arr = cfg.layer_is_global()
+    step = decode_step_mla if cfg.mla is not None else decode_step_gqa
+    has_moe = cfg.moe is not None
+    n_dense = cfg.n_dense_layers
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    new_cache = []
+    for i in range(cfg.n_layers):
+        if i < n_dense:
+            lp = jax.tree.map(lambda a, _i=i: a[_i], params["dense_layers"])
+        else:
+            lp = jax.tree.map(
+                lambda a, _i=i - n_dense: a[_i], params["layers"]
+            )
+        window = None if is_global_arr[i] else cfg.window
+        x, cl = step(x, lp, cache[i], cfg, pos=pos, window=window)
+        new_cache.append(cl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = _unembed(params, cfg).astype(jnp.bfloat16)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return with_logical(logits, ("batch", "vocab")), new_cache
+
+
+def lm_prefill(params, tokens, cfg: LMConfig):
+    """prefill forward: returns last-position hidden states + logits.
+
+    (The dry-run lowers this for `prefill_32k`; cache construction for
+    subsequent decode reuses the backbone's K/V — for the systems study we
+    count the forward itself, the dominant cost.)"""
+    h, _ = lm_backbone(params, tokens, cfg)
+    head = _unembed(params, cfg).astype(jnp.bfloat16)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], head)
+    return with_logical(logits, ("batch", "vocab"))

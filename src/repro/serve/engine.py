@@ -1,0 +1,114 @@
+"""Batched LM serving: a fixed-slot continuous-batching decode server.
+
+A slot pool of B sequences shares one stacked KV cache; requests are
+prefilled into free slots (prompt tokens decoded sequentially through the
+same serve_step — exactness over throughput on this CPU container) and
+finished slots are recycled while other slots keep decoding: the paper's
+"numerous concurrent queries" operating mode, for the LM family.
+
+The same cache layout/sharding lowers in the decode_32k / long_500k
+dry-run cells; here it runs the reduced configs for real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeServer:
+    def __init__(self, params, cfg: T.LMConfig, batch_slots: int,
+                 max_len: int, greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        specs = T.cache_spec(cfg, batch_slots, max_len)
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs
+        )
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int32)  # next position
+        self.slot_pending: list[list[int]] = [[] for _ in range(batch_slots)]
+        self._step = jax.jit(
+            functools.partial(
+                lambda p, c, t, pos, _cfg: T.lm_decode_step(
+                    p, c, t, pos, _cfg
+                ),
+                _cfg=cfg,
+            )
+        )
+
+    # ------------------------------------------------------------ requests
+    def add(self, req: Request) -> bool:
+        for s in range(self.B):
+            if self.slot_req[s] is None:
+                self.slot_req[s] = req
+                self.slot_pos[s] = 0
+                self.slot_pending[s] = list(req.prompt)
+                return True
+        return False  # no free slot; caller queues
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    # ---------------------------------------------------------------- step
+    def step(self):
+        """One global decode step: every active slot consumes one token
+        (prompt token while prefilling, else its previously generated
+        token) and produces the next."""
+        tokens = np.zeros((self.B, 1), np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.slot_pending[s]:
+                tokens[s, 0] = self.slot_pending[s][0]
+            elif req.out:
+                tokens[s, 0] = req.out[-1]
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.slot_pos),
+        )
+        logits = np.asarray(logits)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.slot_pos[s] += 1
+            if self.slot_pending[s]:
+                self.slot_pending[s].pop(0)
+                if self.slot_pending[s]:
+                    continue  # still prefilling
+            nxt = int(np.argmax(logits[s]))
+            req.out.append(nxt)
+            if len(req.out) >= req.max_new or self.slot_pos[s] >= self.max_len - 1:
+                req.done = True
+                self.slot_req[s] = None  # recycle slot
+
+    def run(self, requests: list[Request], max_steps: int = 10_000):
+        queue = list(requests)
+        done = []
+        steps = 0
+        while (queue or self.active) and steps < max_steps:
+            while queue and self.add(queue[0]):
+                queue.pop(0)
+            self.step()
+            steps += 1
+            done = [r for r in requests if r.done]
+        return done, steps

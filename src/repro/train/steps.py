@@ -1,0 +1,35 @@
+"""Step factories: a uniform (params, opt_state, batch) -> step interface
+used by the trainer, the dry-run and the benchmarks."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .optim import OptConfig, adamw_update, init_opt
+
+
+def make_train_step(loss_fn, opt_cfg: OptConfig):
+    """loss_fn(params, batch) -> (loss, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg
+        )
+        metrics = dict(metrics, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(loss_fn):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

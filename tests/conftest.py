@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs ONLY to launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core.dtlp import DTLP
+from repro.data.roadnet import grid_road_network
+
+
+@pytest.fixture(scope="session")
+def small_net():
+    """A ~140-vertex road-like graph (12x12 grid, largest component)."""
+    return grid_road_network(12, 12, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_dtlp(small_net):
+    return DTLP.build(small_net, z=20, xi=4)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

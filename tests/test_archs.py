@@ -1,0 +1,74 @@
+"""Per-architecture smoke tests: reduced config, real forward/train steps
+on CPU, asserting output shapes + finite losses (assignment requirement)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import all_archs
+
+ARCH_NAMES = [
+    "starcoder2-3b",
+    "deepseek-coder-33b",
+    "gemma3-27b",
+    "deepseek-v3-671b",
+    "moonshot-v1-16b-a3b",
+    "dimenet",
+    "meshgraphnet",
+    "graphsage-reddit",
+    "gin-tu",
+    "bst",
+    "kspdg",
+]
+
+
+def test_all_ten_assigned_archs_registered():
+    archs = all_archs()
+    for name in ARCH_NAMES:
+        assert name in archs, name
+    # 10 assigned + the paper's own arch
+    assert len([n for n in ARCH_NAMES if n != "kspdg"]) == 10
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke(name):
+    arch = all_archs()[name]
+    metrics = arch.smoke_fn()
+    assert metrics  # ran and returned something
+    if "losses" in metrics:
+        assert all(np.isfinite(v) for v in metrics["losses"])
+
+
+def test_cell_inventory():
+    """40 assigned cells: 5 LM × 4 + 4 GNN × 4 + 1 recsys × 4."""
+    archs = all_archs()
+    per_family = {"lm": 0, "gnn": 0, "recsys": 0, "ksp": 0}
+    skips = []
+    for name, arch in archs.items():
+        cells = arch.cells()
+        per_family[arch.family] += len(cells)
+        skips += [c for c in cells if c.skip]
+    assert per_family["lm"] == 20
+    assert per_family["gnn"] == 16
+    assert per_family["recsys"] == 4
+    assert per_family["ksp"] >= 3  # the paper's own data plane
+    # exactly the two documented long_500k skips
+    assert sorted(c.arch for c in skips) == [
+        "deepseek-coder-33b",
+        "moonshot-v1-16b-a3b",
+    ]
+
+
+def test_lm_param_counts_match_scale():
+    """Analytic parameter counts sit at the published model scales."""
+    from repro.configs.deepseek_coder_33b import CFG as coder
+    from repro.configs.deepseek_v3_671b import CFG as v3
+    from repro.configs.gemma3_27b import CFG as gemma
+    from repro.configs.moonshot_v1_16b_a3b import CFG as moon
+    from repro.configs.starcoder2_3b import CFG as sc2
+
+    assert 2.5e9 < sc2.param_count() < 3.5e9
+    assert 30e9 < coder.param_count() < 36e9
+    assert 24e9 < gemma.param_count() < 30e9
+    assert 620e9 < v3.param_count() < 700e9
+    assert 30e9 < v3.active_param_count() < 45e9
+    assert 14e9 < moon.param_count() < 32e9  # 48L assigned variant

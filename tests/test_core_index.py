@@ -1,0 +1,158 @@
+"""DTLP index invariants: bounding paths, LBD/Theorem 1, skeleton/Theorem 2,
+EBP-II / LSH / MPTree equivalence, and incremental-maintenance consistency
+(Sections 3-4)."""
+
+import numpy as np
+import pytest
+
+from repro.core.bounding import bound_distances, unit_weight_profile
+from repro.core.dtlp import DTLP
+from repro.core.lsh import lsh_groups, minhash_signatures
+from repro.core.mptree import GMPTree
+from repro.core.sssp import dijkstra, subgraph_view
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+
+
+@pytest.fixture(scope="module")
+def net():
+    return grid_road_network(10, 10, seed=5)
+
+
+@pytest.fixture(scope="module")
+def index(net):
+    return DTLP.build(net, z=16, xi=4)
+
+
+class TestBoundDistances:
+    def test_bd_is_sum_of_smallest_units(self, rng):
+        w = rng.uniform(1.0, 9.0, size=50)
+        vf = np.maximum(1, np.rint(w)).astype(np.int64)
+        prof = unit_weight_profile(w, vf)
+        units = np.sort(np.repeat(w / vf, vf))
+        for phi in [1, 3, 10, int(vf.sum())]:
+            got = bound_distances(prof, np.array([phi]))[0]
+            assert abs(got - units[:phi].sum()) < 1e-9
+
+    def test_example2_of_paper(self):
+        """SG'_4 of Fig. 4: units (1/3 x3, 1/2 x4, 1 x8, 2 x3); BD(phi=8)=4."""
+        w = np.array([1.0, 2.0, 8.0, 6.0])
+        vf = np.array([3, 4, 8, 3], dtype=np.int64)
+        prof = unit_weight_profile(w, vf)
+        got = bound_distances(prof, np.array([8]))[0]
+        assert abs(got - (3 * (1 / 3) + 4 * 0.5 + 1 * 1.0)) < 1e-12
+
+
+class TestLBD:
+    def test_lbd_lower_bounds_shortest_distance(self, net, index):
+        """LBD(i,j) ≤ true shortest distance within the subgraph — the
+        property Theorem 1 is used for, under current weights."""
+        for si in index.sub_indexes:
+            view = subgraph_view(si.sg, net.w)
+            for p, (i, j) in enumerate(si.pairs):
+                dist, _, best = dijkstra(view, int(i), int(j))
+                assert si.lbd[p] <= best + 1e-9, (si.sg.gid, i, j)
+
+    def test_lbd_stays_valid_after_updates(self):
+        g = grid_road_network(10, 10, seed=5)  # private: updates mutate g
+        idx = DTLP.build(g, z=16, xi=4)
+        stream = WeightUpdateStream(g, alpha=0.6, tau=0.6, seed=3)
+        for _ in range(3):
+            eids, new_w = stream.next_batch()
+            idx.apply_updates(eids, new_w)
+        for si in idx.sub_indexes:
+            view = subgraph_view(si.sg, g.w)
+            for p, (i, j) in enumerate(si.pairs):
+                _, _, best = dijkstra(view, int(i), int(j))
+                assert si.lbd[p] <= best + 1e-9
+
+    def test_skeleton_theorem2(self, net, index):
+        """D(P1_lambda(s,t)) ≤ D(P1(s,t)) for boundary pairs (Theorem 2)."""
+        from repro.core.sssp import graph_view
+
+        gview = graph_view(net)
+        sview = index.skeleton.view()
+        boundary = np.nonzero(index.partition.is_boundary)[0]
+        rng = np.random.default_rng(0)
+        for _ in range(15):
+            s, t = map(int, rng.choice(boundary, size=2, replace=False))
+            _, _, d_g = dijkstra(gview, s, t)
+            ls, lt = index.skeleton.g2s[s], index.skeleton.g2s[t]
+            _, _, d_l = dijkstra(sview, int(ls), int(lt))
+            assert d_l <= d_g + 1e-9
+
+
+class TestMaintenance:
+    def test_incremental_equals_rebuild(self):
+        """After updates, incrementally maintained D/BD/LBD must equal a
+        from-scratch rebuild of the same index (same partition/paths)."""
+        net = grid_road_network(10, 10, seed=5)
+        idx = DTLP.build(net, z=16, xi=4)
+        stream = WeightUpdateStream(net, alpha=0.5, tau=0.5, seed=11)
+        for _ in range(4):
+            eids, new_w = stream.next_batch()
+            idx.apply_updates(eids, new_w)
+        # rebuild bounds from scratch on the *same* bounding paths
+        for si in idx.sub_indexes:
+            D_inc = si.path_D.copy()
+            # recompute each path's actual distance from current weights
+            for p, eidlist in enumerate(si.path_edges):
+                if eidlist is None:
+                    assert not np.isfinite(D_inc[p])
+                    continue
+                d = float(net.w[eidlist].sum())
+                assert abs(D_inc[p] - d) < 1e-6, (si.sg.gid, p)
+
+    def test_bounding_paths_never_change(self):
+        net = grid_road_network(10, 10, seed=5)
+        idx = DTLP.build(net, z=16, xi=4)
+        before = [
+            [None if p is None else tuple(p) for p in si.path_vertices]
+            for si in idx.sub_indexes
+        ]
+        stream = WeightUpdateStream(net, alpha=0.9, tau=0.9, seed=12)
+        eids, new_w = stream.next_batch()
+        idx.apply_updates(eids, new_w)
+        after = [
+            [None if p is None else tuple(p) for p in si.path_vertices]
+            for si in idx.sub_indexes
+        ]
+        assert before == after  # "insensitive to varying traffic conditions"
+
+
+class TestStorage:
+    def test_mptree_equals_ebpii(self, net):
+        """paths_containing(e) identical between EBP-II and G-MPTree."""
+        ebp_idx = DTLP.build(net, z=16, xi=4, storage="ebpii")
+        mpt_idx = DTLP.build(net, z=16, xi=4, storage="mptree")
+        for se, sm in zip(ebp_idx.sub_indexes, mpt_idx.sub_indexes):
+            for e in se.sg.edges:
+                a = np.sort(se.storage.paths_containing(int(e)))
+                b = np.sort(sm.storage.paths_containing(int(e)))
+                assert np.array_equal(a, b), int(e)
+
+    def test_mptree_compacts(self, net):
+        idx = DTLP.build(net, z=16, xi=6, storage="mptree")
+        # paper Fig. 15e: MPTree consumes less than EBP-II
+        assert idx.stats.mptree_slots < idx.stats.ebp_slots
+
+    def test_lsh_groups_partition_columns(self, net):
+        idx = DTLP.build(net, z=16, xi=4, storage="ebpii")
+        si = idx.sub_indexes[0]
+        n_paths = len(si.path_edges)
+        sig = minhash_signatures(si.storage, n_paths, h=20)
+        groups = lsh_groups(sig, b=2)
+        all_cols = np.concatenate(groups) if groups else np.array([])
+        assert np.array_equal(np.sort(all_cols), np.arange(sig.shape[1]))
+
+    def test_gmptree_maintenance_matches(self):
+        ga = grid_road_network(10, 10, seed=5)
+        gb = grid_road_network(10, 10, seed=5)
+        a = DTLP.build(ga, z=16, xi=4, storage="ebpii")
+        b = DTLP.build(gb, z=16, xi=4, storage="mptree")
+        stream = WeightUpdateStream(ga, alpha=0.4, tau=0.5, seed=4)
+        eids, new_w = stream.next_batch()
+        a.apply_updates(eids.copy(), new_w.copy())
+        b.apply_updates(eids.copy(), new_w.copy())
+        for sa, sb in zip(a.sub_indexes, b.sub_indexes):
+            np.testing.assert_allclose(sa.path_D, sb.path_D, rtol=1e-12)
+            np.testing.assert_allclose(sa.lbd, sb.lbd, rtol=1e-12)

@@ -1,0 +1,138 @@
+"""KSP algorithms: Yen / Para-Yen / PYen / FindKSP exactness (Section 5.3).
+
+Oracle: brute-force enumeration of all simple paths (networkx) on small
+graphs. All four deviation-paradigm variants must return identical
+distance lists (ties may permute same-distance paths).
+"""
+
+import itertools
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.sssp import dijkstra, extract_path, graph_view, reverse_spt
+from repro.core.yen import ksp
+from tests.test_core_graph import random_graph
+
+
+def brute_ksp(g, src, dst, k):
+    nxg = g.to_networkx()
+    paths = []
+    for p in nx.all_simple_paths(nxg, src, dst, cutoff=g.n):
+        d = sum(nxg[a][b]["weight"] for a, b in zip(p, p[1:]))
+        paths.append((d, tuple(p)))
+    paths.sort(key=lambda x: (x[0], x[1]))
+    return paths[:k]
+
+
+MODES = ["yen", "para_yen", "pyen", "findksp"]
+
+
+class TestSSSP:
+    def test_dijkstra_vs_networkx(self):
+        g = random_graph(40, 100, 7)
+        view = graph_view(g)
+        nxg = g.to_networkx()
+        dist, parent, _ = dijkstra(view, 0, None)
+        nxd = nx.single_source_dijkstra_path_length(nxg, 0)
+        for v in range(g.n):
+            expect = nxd.get(v, np.inf)
+            assert abs(dist[v] - expect) < 1e-9
+
+    def test_banned_vertices_and_edges(self):
+        g = random_graph(30, 80, 8)
+        view = graph_view(g)
+        banned_v = np.zeros(g.n, dtype=bool)
+        banned_v[3] = banned_v[4] = True
+        dist, parent, best = dijkstra(
+            view, 0, g.n - 1, banned_vertices=banned_v, banned_edges={(0, 1)}
+        )
+        if best < np.inf:
+            p = extract_path(parent, 0, g.n - 1)
+            assert 3 not in p and 4 not in p
+            assert not (p[0] == 0 and p[1] == 1)
+
+    def test_reverse_spt_is_admissible(self):
+        g = random_graph(35, 90, 9)
+        view = graph_view(g)
+        dst = g.n - 1
+        a_d, a_p = reverse_spt(view, dst, directed=False)
+        nxg = g.to_networkx()
+        nxd = nx.single_source_dijkstra_path_length(nxg, dst)
+        for v in range(g.n):
+            assert abs(a_d[v] - nxd.get(v, np.inf)) < 1e-9
+        # A_P next-hops walk to dst along a shortest path
+        for v in range(g.n):
+            if a_d[v] < np.inf and v != dst:
+                u, total, hops = v, 0.0, 0
+                while u != dst:
+                    nxt = int(a_p[u])
+                    assert nxt >= 0
+                    total += nxg[u][nxt]["weight"]
+                    u = nxt
+                    hops += 1
+                    assert hops <= g.n
+                assert abs(total - a_d[v]) < 1e-9
+
+
+class TestKSPVariants:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("k", [1, 3, 8])
+    def test_exactness_small(self, mode, k):
+        g = random_graph(12, 26, 11)
+        view = graph_view(g)
+        for src, dst in [(0, 11), (2, 9), (5, 1)]:
+            got = ksp(view, src, dst, k, mode=mode)
+            want = brute_ksp(g, src, dst, k)
+            assert [round(d, 9) for d, _ in got] == [
+                round(d, 9) for d, _ in want
+            ], (mode, src, dst)
+            for d, p in got:  # loopless + endpoints + valid distance
+                assert p[0] == src and p[-1] == dst
+                assert len(set(p)) == len(p)
+                assert abs(g.path_distance(p) - d) < 1e-9
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 6))
+    def test_property_all_modes_agree(self, seed, k):
+        g = random_graph(14, 30, seed)
+        view = graph_view(g)
+        rng = np.random.default_rng(seed)
+        src, dst = map(int, rng.choice(g.n, size=2, replace=False))
+        results = [
+            [round(d, 9) for d, _ in ksp(view, src, dst, k, mode=m)]
+            for m in MODES
+        ]
+        assert all(r == results[0] for r in results)
+
+    def test_disconnected(self):
+        g = random_graph(10, 12, 13)
+        # isolate vertex 9 by building a graph with no edges touching it
+        keep = (g.edge_u != 9) & (g.edge_v != 9)
+        from repro.core.graph import Graph
+
+        g2 = Graph(10, g.edge_u[keep], g.edge_v[keep], g.w0[keep])
+        view = graph_view(g2)
+        assert ksp(view, 0, 9, 3) == []
+
+    def test_k_larger_than_path_count(self):
+        # a path graph has exactly 1 simple path between its endpoints
+        from repro.core.graph import Graph
+
+        g = Graph(4, [0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
+        view = graph_view(g)
+        got = ksp(view, 0, 3, 5)
+        assert len(got) == 1 and abs(got[0][0] - 6.0) < 1e-12
+
+    def test_directed(self):
+        from repro.core.graph import Graph
+
+        # directed triangle + chord: 0->1->2, 0->2; reverse absent
+        g = Graph(3, [0, 1, 0], [1, 2, 2], [1.0, 1.0, 5.0], directed=True)
+        view = graph_view(g)
+        got = ksp(view, 0, 2, 3, directed=True)
+        assert [round(d, 9) for d, _ in got] == [2.0, 5.0]
+        assert ksp(view, 2, 0, 2, directed=True) == []

@@ -1,0 +1,163 @@
+"""Distributed runtime: exactness through the cluster, fault injection,
+straggler re-issue, elastic rescale, checkpoint/restore."""
+
+import numpy as np
+import pytest
+
+from repro.core.dtlp import DTLP
+from repro.core.sssp import graph_view
+from repro.core.yen import ksp
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+from repro.dist.cluster import Cluster
+from repro.dist.placement import place, subgraph_loads
+
+
+def make_cluster(n_workers=4, engine="dense_bf", seed=2):
+    g = grid_road_network(10, 10, seed=seed)
+    d = DTLP.build(g, z=16, xi=4)
+    return g, Cluster(d, n_workers=n_workers, engine=engine)
+
+
+def check(g, cluster, queries, k=3):
+    view = graph_view(g)
+    for s, t in queries:
+        got = cluster.query(s, t, k)
+        want = ksp(view, s, t, k)
+        # the dense engine computes in f32; compare at f32 resolution
+        assert len(got) == len(want), (s, t)
+        np.testing.assert_allclose(
+            [x for x, _ in got], [x for x, _ in want], rtol=1e-5,
+            err_msg=f"query ({s},{t})",
+        )
+
+
+def rand_queries(g, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+        for _ in range(n)
+    ]
+
+
+class TestPlacement:
+    def test_lpt_balance(self):
+        g = grid_road_network(12, 12, seed=1)
+        d = DTLP.build(g, z=16, xi=4)
+        loads = subgraph_loads(d)
+        pl = place(loads, 4)
+        # LPT guarantee: max bin ≤ avg + max item
+        assert pl.load.max() <= loads.sum() / 4 + loads.max() + 1e-9
+        # replica never equals primary (with >1 workers)
+        assert np.all(pl.primary != pl.replica)
+
+    def test_every_subgraph_owned(self):
+        g = grid_road_network(10, 10, seed=3)
+        d = DTLP.build(g, z=16, xi=4)
+        pl = place(subgraph_loads(d), 3)
+        assert set(pl.primary) <= set(range(3))
+        assert pl.primary.shape[0] == d.partition.n_subgraphs
+
+
+class TestClusterExactness:
+    @pytest.mark.parametrize("engine", ["dense_bf", "pyen"])
+    def test_exact(self, engine):
+        g, cl = make_cluster(4, engine)
+        check(g, cl, rand_queries(g, 8, seed=1))
+
+    def test_exact_under_updates(self):
+        g, cl = make_cluster(4)
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=5)
+        for round_ in range(2):
+            eids, new_w = stream.next_batch()
+            cl.apply_updates(eids, new_w)
+            check(g, cl, rand_queries(g, 5, seed=round_ + 10))
+
+    def test_single_worker(self):
+        g, cl = make_cluster(1)
+        check(g, cl, rand_queries(g, 4, seed=2))
+
+
+class TestFaults:
+    def test_worker_failure_transparent(self):
+        g, cl = make_cluster(4)
+        cl.kill(2)
+        check(g, cl, rand_queries(g, 6, seed=3))
+        assert cl.reissues > 0  # replica actually took over
+
+    def test_straggler_reissue(self):
+        g, cl = make_cluster(4)
+        cl.mark_slow(1)
+        check(g, cl, rand_queries(g, 6, seed=4))
+        assert cl.reissues > 0
+        cl.mark_slow(1, False)
+        base = cl.reissues
+        check(g, cl, rand_queries(g, 3, seed=5))
+        assert cl.reissues == base  # recovered: no more re-issues
+
+    def test_double_failure_detected(self):
+        g, cl = make_cluster(2)
+        cl.kill(0)
+        cl.kill(1)
+        with pytest.raises(RuntimeError, match="data loss"):
+            cl.query(0, g.n - 1, 2)
+
+    def test_elastic_rescale(self):
+        g, cl = make_cluster(2)
+        qs = rand_queries(g, 4, seed=6)
+        check(g, cl, qs)
+        cl.rescale(6)
+        check(g, cl, qs)
+        cl.rescale(3)
+        check(g, cl, qs)
+
+
+class TestCheckpoint:
+    def test_restore_is_exact(self):
+        g, cl = make_cluster(3, seed=7)
+        stream = WeightUpdateStream(g, alpha=0.4, tau=0.5, seed=8)
+        eids, new_w = stream.next_batch()
+        cl.apply_updates(eids, new_w)
+        snap = cl.checkpoint()
+        qs = rand_queries(g, 5, seed=9)
+        want = [cl.query(s, t, 3) for s, t in qs]
+
+        cl2 = Cluster.restore(
+            snap, lambda: grid_road_network(10, 10, seed=7), z=16, xi=4
+        )
+        got = [cl2.query(s, t, 3) for s, t in qs]
+        for a, b in zip(want, got):
+            assert [round(x, 8) for x, _ in a] == [round(x, 8) for x, _ in b]
+
+    def test_pytree_checkpointer_roundtrip(self, tmp_path):
+        """The training-side sharded checkpointer: save/restore/gc."""
+        import jax.numpy as jnp
+
+        from repro.ckpt.checkpoint import Checkpointer
+
+        ck = Checkpointer(str(tmp_path), keep=2)
+        state = {
+            "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones(4)},
+            "opt": [{"m": jnp.zeros(3)}, {"v": jnp.full((2, 2), 7.0)}],
+        }
+        for step in [1, 2, 3]:
+            ck.save(step, state, blocking=True)
+        assert ck.list_steps() == [2, 3]  # keep=2 gc'd step 1
+        step, got = ck.restore()
+        assert step == 3
+        np.testing.assert_array_equal(
+            np.asarray(state["params"]["w"]), got["params"]["w"]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(state["opt"][1]["v"]), got["opt"][1]["v"]
+        )
+
+    def test_async_save(self, tmp_path):
+        import jax.numpy as jnp
+
+        from repro.ckpt.checkpoint import Checkpointer
+
+        ck = Checkpointer(str(tmp_path))
+        ck.save(5, {"x": jnp.ones(8)}, blocking=False)
+        ck.wait()
+        step, got = ck.restore()
+        assert step == 5 and got["x"].shape == (8,)

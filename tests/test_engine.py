@@ -1,0 +1,222 @@
+"""Engine ↔ host parity: batched BF vs Dijkstra, ktrop vs the numpy DP,
+bound_dist vs the profile reference, engine_ksp vs core Yen."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.bounding import (
+    bound_distances,
+    kdistinct_walk_dp,
+    unit_weight_profile,
+)
+from repro.core.dtlp import DTLP
+from repro.core.sssp import dijkstra, graph_view, subgraph_view
+from repro.core.yen import ksp
+from repro.data.roadnet import grid_road_network
+from repro.engine import dense as E
+from repro.engine.yen_engine import engine_ksp
+from tests.test_core_graph import random_graph
+
+_INF = float(E.INF)
+
+
+def dense_adj(g):
+    a = np.full((g.n, g.n), _INF, np.float32)
+    np.fill_diagonal(a, 0.0)
+    for e in range(g.m):
+        u, v, w = int(g.edge_u[e]), int(g.edge_v[e]), float(g.w[e])
+        a[u, v] = min(a[u, v], w)
+        if not g.directed:
+            a[v, u] = min(a[v, u], w)
+    return a
+
+
+class TestBF:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_bf_matches_dijkstra(self, seed):
+        g = random_graph(24, 60, seed)
+        adj = dense_adj(g)
+        view = graph_view(g)
+        srcs = [0, 5, 11]
+        init = np.full((len(srcs), g.n), _INF, np.float32)
+        for i, s in enumerate(srcs):
+            init[i, s] = 0.0
+        dist, iters = E.bf_solve(
+            jnp.asarray(np.broadcast_to(adj, (len(srcs), g.n, g.n))),
+            jnp.asarray(init),
+        )
+        dist = np.asarray(dist)
+        for i, s in enumerate(srcs):
+            want, _, _ = dijkstra(view, s, None)
+            got = np.where(dist[i] > _INF / 2, np.inf, dist[i])
+            np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_banned_vertices(self):
+        g = random_graph(20, 50, 3)
+        adj = dense_adj(g)
+        view = graph_view(g)
+        banned = np.zeros((1, g.n), bool)
+        banned[0, [2, 3]] = True
+        init = np.full((1, g.n), _INF, np.float32)
+        init[0, 0] = 0.0
+        dist, _ = E.bf_solve(
+            jnp.asarray(adj[None]), jnp.asarray(init), jnp.asarray(banned)
+        )
+        bv = np.zeros(g.n, bool)
+        bv[[2, 3]] = True
+        want, _, _ = dijkstra(view, 0, None, banned_vertices=bv)
+        got = np.where(np.asarray(dist)[0] > _INF / 2, np.inf, np.asarray(dist)[0])
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_spur_banned_next_edges(self):
+        g = random_graph(18, 44, 4)
+        adj = dense_adj(g)
+        view = graph_view(g)
+        spur = 0
+        nbrs, _ = g.neighbors(spur)
+        ban_to = int(nbrs[0])
+        so = np.zeros((1, g.n), bool)
+        so[0, spur] = True
+        bn = np.zeros((1, g.n), bool)
+        bn[0, ban_to] = True
+        init = np.full((1, g.n), _INF, np.float32)
+        init[0, spur] = 0.0
+        dist, _ = E.bf_solve(
+            jnp.asarray(adj[None]), jnp.asarray(init),
+            spur_onehot=jnp.asarray(so), banned_next=jnp.asarray(bn),
+        )
+        want, _, _ = dijkstra(view, spur, None, banned_edges={(spur, ban_to)})
+        got = np.where(np.asarray(dist)[0] > _INF / 2, np.inf, np.asarray(dist)[0])
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_warm_start_is_sound(self):
+        """BF from any upper-bound init converges to the same fixpoint."""
+        g = random_graph(22, 55, 5)
+        adj = dense_adj(g)
+        init = np.full((1, g.n), _INF, np.float32)
+        init[0, 0] = 0.0
+        cold, _ = E.bf_solve(jnp.asarray(adj[None]), jnp.asarray(init))
+        warm_init = np.asarray(cold).copy() + 7.5  # stale upper bounds
+        warm_init[0, 0] = 0.0
+        warm, it_warm = E.bf_solve(jnp.asarray(adj[None]), jnp.asarray(warm_init))
+        np.testing.assert_allclose(np.asarray(warm), np.asarray(cold), rtol=1e-5)
+
+    def test_grouped_matches_flat(self):
+        g = random_graph(20, 50, 6)
+        adj = dense_adj(g)
+        init = np.full((4, g.n), _INF, np.float32)
+        for i, s in enumerate([0, 3, 7, 9]):
+            init[i, s] = 0.0
+        flat, _ = E.bf_solve(
+            jnp.asarray(np.broadcast_to(adj, (4, g.n, g.n))), jnp.asarray(init)
+        )
+        grouped, _ = E.bf_solve_grouped(
+            jnp.asarray(adj[None]), jnp.asarray(init[None])
+        )
+        np.testing.assert_allclose(
+            np.asarray(grouped)[0], np.asarray(flat), rtol=1e-6
+        )
+
+    def test_parents_reconstruct_shortest_paths(self):
+        g = random_graph(20, 50, 8)
+        adj = dense_adj(g)
+        init = np.full((1, g.n), _INF, np.float32)
+        init[0, 0] = 0.0
+        so = jnp.zeros((1, g.n), bool)
+        bn = jnp.zeros((1, g.n), bool)
+        dist, _ = E.bf_solve(jnp.asarray(adj[None]), jnp.asarray(init))
+        parent = np.asarray(E.bf_parents(jnp.asarray(adj[None]), dist, so, bn))
+        dist = np.asarray(dist)
+        for v in range(1, g.n):
+            if dist[0, v] > _INF / 2:
+                continue
+            # walk parents to source; sum edge weights = dist
+            total, u, hops = 0.0, v, 0
+            while u != 0:
+                p = int(parent[0, u])
+                assert p >= 0
+                total += adj[p, u]
+                u = p
+                hops += 1
+                assert hops <= g.n
+            assert abs(total - dist[0, v]) < 1e-4
+
+
+class TestKtrop:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(2, 5))
+    def test_matches_numpy_dp(self, seed, k):
+        g = random_graph(12, 28, seed)
+        adj = dense_adj(g)
+        # the dense slab collapses parallel edges to their min weight (the
+        # engine contract — conservative for bound distances); build the
+        # CSR reference from the collapsed matrix for an exact comparison.
+        src_l, dst_l = np.nonzero((adj < _INF / 2) & ~np.eye(g.n, dtype=bool))
+        order = np.argsort(src_l, kind="stable")
+        src_l, dst_l = src_l[order], dst_l[order]
+        indptr = np.zeros(g.n + 1, np.int64)
+        np.cumsum(np.bincount(src_l, minlength=g.n), out=indptr[1:])
+        want = kdistinct_walk_dp(
+            indptr, dst_l, adj[src_l, dst_l].astype(np.float64), 0, k
+        )
+        got = E.ktrop_solve(jnp.asarray(adj[None]), jnp.asarray([0]), k)
+        got = np.where(np.asarray(got)[0] > _INF / 2, np.inf, np.asarray(got)[0])
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+class TestBoundDist:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_matches_profile_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        E_n = 20
+        w = rng.uniform(1.0, 9.0, E_n)
+        vf = np.maximum(1, np.rint(w)).astype(np.int64)
+        prof = unit_weight_profile(w, vf)
+        phis = np.array([1, 2, 5, int(vf.sum()) // 2, int(vf.sum())])
+        want = bound_distances(prof, phis)
+        unit_w = (w / vf).astype(np.float32)[None]
+        unit_n = vf.astype(np.float32)[None]
+        got = E.bound_dist_batch(
+            jnp.asarray(unit_w), jnp.asarray(unit_n),
+            jnp.zeros(len(phis), jnp.int32), jnp.asarray(phis, jnp.float32),
+        )
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+class TestEngineKSP:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 5))
+    def test_matches_core_yen(self, seed, k):
+        g = random_graph(14, 34, seed)
+        adj = dense_adj(g)
+        view = graph_view(g)
+        rng = np.random.default_rng(seed)
+        s, t = map(int, rng.choice(g.n, size=2, replace=False))
+        got = engine_ksp(adj, s, t, k)
+        want = ksp(view, s, t, k)
+        assert len(got) == len(want)
+        np.testing.assert_allclose(
+            [d for d, _ in got], [d for d, _ in want], rtol=1e-5
+        )
+
+    def test_subgraph_scale(self):
+        """Engine on a real DTLP subgraph slab (the refine workload)."""
+        g = grid_road_network(10, 10, seed=9)
+        d = DTLP.build(g, z=20, xi=3)
+        slab = E.pack_subgraphs(d.partition, g.w)
+        si = d.sub_indexes[0]
+        sg = si.sg
+        adj = slab.adj[sg.gid]
+        view = subgraph_view(sg, g.w)
+        got = engine_ksp(adj, 0, sg.nv - 1, 4)
+        want = ksp(view, 0, sg.nv - 1, 4)
+        assert len(got) == len(want)
+        np.testing.assert_allclose(
+            [x for x, _ in got], [x for x, _ in want], rtol=1e-5
+        )

@@ -1,0 +1,177 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (hypothesis) +
+assert_allclose, per the kernel contract.  All run interpret=True on CPU."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+_INF = float(ref.INF)
+
+
+def rand_slab(rng, S, J, z, density=0.3):
+    adj = rng.uniform(1.0, 50.0, (S, z, z)).astype(np.float32)
+    mask = rng.random((S, z, z)) > density
+    adj[mask] = _INF
+    for s in range(S):
+        np.fill_diagonal(adj[s], 0.0)
+    dist = np.full((S, J, z), _INF, np.float32)
+    for s in range(S):
+        for j in range(J):
+            dist[s, j, rng.integers(z)] = 0.0
+    # a few problems mid-relaxation: finite partial distances
+    dist[:, :, : z // 4] = np.where(
+        rng.random((S, J, z // 4)) < 0.5,
+        rng.uniform(0, 30, (S, J, z // 4)).astype(np.float32),
+        dist[:, :, : z // 4],
+    )
+    return adj, dist
+
+
+class TestBFRelax:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.integers(0, 1000),
+        st.sampled_from([128, 256]),
+        st.sampled_from([1, 3, 8]),
+    )
+    def test_vs_oracle(self, seed, z, J):
+        rng = np.random.default_rng(seed)
+        S = 2
+        adj, dist = rand_slab(rng, S, J, z)
+        spur = (rng.random((S, J, z)) < 0.05).astype(np.float32)
+        ban = (rng.random((S, J, z)) < 0.1).astype(np.float32)
+        cap = rng.uniform(20, 80, (S, J)).astype(np.float32)
+        got = np.asarray(ops.bf_relax_step(
+            jnp.asarray(dist), jnp.asarray(adj), jnp.asarray(spur),
+            jnp.asarray(ban), jnp.asarray(cap),
+        ))
+        want = np.asarray(ref.bf_relax_ref(
+            jnp.asarray(dist), jnp.asarray(adj),
+            jnp.asarray(spur) > 0.5, jnp.asarray(ban) > 0.5,
+            jnp.asarray(cap),
+        ))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_no_cap(self):
+        rng = np.random.default_rng(0)
+        adj, dist = rand_slab(rng, 1, 2, 128)
+        got = np.asarray(ops.bf_relax_step(
+            jnp.asarray(dist), jnp.asarray(adj),
+            jnp.zeros((1, 2, 128)), jnp.zeros((1, 2, 128)),
+        ))
+        want = np.asarray(ref.bf_relax_ref(
+            jnp.asarray(dist), jnp.asarray(adj),
+            jnp.zeros((1, 2, 128), bool), jnp.zeros((1, 2, 128), bool),
+            jnp.full((1, 2), _INF),
+        ))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_iterated_matches_engine_solve(self):
+        """Iterating the kernel to fixpoint == engine bf_solve_grouped."""
+        from repro.engine import dense as E
+
+        rng = np.random.default_rng(5)
+        adj, dist = rand_slab(rng, 2, 4, 128)
+        want, _ = E.bf_solve_grouped(jnp.asarray(adj), jnp.asarray(dist))
+        d = jnp.asarray(dist)
+        for _ in range(128):
+            new = ops.bf_relax_step(
+                d, jnp.asarray(adj), jnp.zeros_like(d), jnp.zeros_like(d)
+            )
+            if bool(jnp.all(new == d)):
+                break
+            d = new
+        np.testing.assert_allclose(np.asarray(d), np.asarray(want), rtol=1e-6)
+
+
+class TestKtrop:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.integers(0, 1000),
+        st.sampled_from([128, 256]),
+        st.sampled_from([2, 4, 10]),
+    )
+    def test_vs_oracle(self, seed, z, k):
+        rng = np.random.default_rng(seed)
+        adj, _ = rand_slab(rng, 2, 1, z)
+        D = np.full((2, k, z), _INF, np.float32)
+        D[0, 0, rng.integers(z)] = 0.0
+        D[1, 0, rng.integers(z)] = 0.0
+        got = np.asarray(ops.ktrop_relax_step(jnp.asarray(D), jnp.asarray(adj)))
+        want = np.asarray(ref.ktrop_relax_ref(jnp.asarray(D), jnp.asarray(adj)))
+        # both must produce the same finite levels
+        got = np.where(got > _INF / 2, np.inf, got)
+        want = np.where(want > _INF / 2, np.inf, want)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_iterated_mid_state(self):
+        """A second relaxation round from a partially-filled D agrees."""
+        rng = np.random.default_rng(9)
+        adj, _ = rand_slab(rng, 1, 1, 128)
+        D = np.full((1, 3, 128), _INF, np.float32)
+        D[0, 0, 0] = 0.0
+        D1r = ref.ktrop_relax_ref(jnp.asarray(D), jnp.asarray(adj))
+        D1k = ops.ktrop_relax_step(jnp.asarray(D), jnp.asarray(adj))
+        D2r = np.asarray(ref.ktrop_relax_ref(D1r, jnp.asarray(adj)))
+        D2k = np.asarray(ops.ktrop_relax_step(D1k, jnp.asarray(adj)))
+        D2r = np.where(D2r > _INF / 2, np.inf, D2r)
+        D2k = np.where(D2k > _INF / 2, np.inf, D2k)
+        np.testing.assert_allclose(D2k, D2r, rtol=1e-5)
+
+
+class TestBoundDist:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([64, 256]))
+    def test_vs_oracle(self, seed, E):
+        rng = np.random.default_rng(seed)
+        S = 3
+        B = 512  # 2 blocks of 256
+        w = np.sort(rng.uniform(0.1, 5.0, (S, E)).astype(np.float32), -1)
+        n = rng.integers(1, 9, (S, E)).astype(np.float32)
+        cb = np.concatenate(
+            [np.zeros((S, 1), np.float32), np.cumsum(n, -1)[:, :-1]], -1
+        )
+        # queries grouped by subgraph: blocks of 256 share a subgraph
+        sub_blocked = rng.integers(0, S, B // 256).astype(np.int32)
+        sub_full = np.repeat(sub_blocked, 256)
+        phi = rng.uniform(0, float(n.sum(-1).max()), B).astype(np.float32)
+        got = np.asarray(ops.bound_dist_blocked(
+            jnp.asarray(w), jnp.asarray(n), jnp.asarray(cb),
+            jnp.asarray(sub_blocked), jnp.asarray(phi),
+        ))
+        want = np.asarray(ref.bound_dist_ref(
+            jnp.asarray(w), jnp.asarray(n), jnp.asarray(cb),
+            jnp.asarray(sub_full), jnp.asarray(phi),
+        ))
+        np.testing.assert_allclose(got, want, rtol=2e-5)
+
+    def test_matches_core_bound_distances(self):
+        """Kernel BD == the paper-level reference (core.bounding)."""
+        from repro.core.bounding import bound_distances, unit_weight_profile
+
+        rng = np.random.default_rng(3)
+        E = 64
+        w_edge = rng.uniform(1.0, 9.0, E)
+        vf = np.maximum(1, np.rint(w_edge)).astype(np.int64)
+        prof = unit_weight_profile(w_edge, vf)
+        phis = np.array([1.0, 5.0, 17.0, float(vf.sum())], np.float32)
+        want = bound_distances(prof, phis.astype(np.int64))
+        unit = (w_edge / vf).astype(np.float32)
+        order = np.argsort(unit)
+        ws = unit[order][None]
+        ns = vf[order].astype(np.float32)[None]
+        cb = np.concatenate([[0.0], np.cumsum(ns[0])[:-1]])[None].astype(
+            np.float32
+        )
+        phi_pad = np.zeros(256, np.float32)
+        phi_pad[: len(phis)] = phis
+        got = np.asarray(ops.bound_dist_blocked(
+            jnp.asarray(ws), jnp.asarray(ns), jnp.asarray(cb),
+            jnp.zeros(1, jnp.int32), jnp.asarray(phi_pad),
+        ))[: len(phis)]
+        np.testing.assert_allclose(got, want, rtol=1e-5)

@@ -1,0 +1,118 @@
+"""KSP-DG end-to-end exactness (Section 5, Theorem 3) on dynamic graphs."""
+
+import numpy as np
+import pytest
+
+from repro.core.dtlp import DTLP
+from repro.core.kspdg import PartialKSPCache, ksp_dg
+from repro.core.sssp import graph_view
+from repro.core.yen import ksp
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+
+
+def check_queries(dtlp, g, queries, k, **kw):
+    view = graph_view(g)
+    for s, t in queries:
+        got = ksp_dg(dtlp, s, t, k, **kw)
+        want = ksp(view, s, t, k)
+        assert [round(d, 8) for d, _ in got] == [
+            round(d, 8) for d, _ in want
+        ], (s, t)
+        for d, p in got:
+            assert p[0] == s and p[-1] == t and len(set(p)) == len(p)
+            assert abs(g.path_distance(p) - d) < 1e-8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = grid_road_network(12, 12, seed=0)
+    d = DTLP.build(g, z=20, xi=4)
+    rng = np.random.default_rng(42)
+    queries = [
+        tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+        for _ in range(12)
+    ]
+    return g, d, queries
+
+
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_exactness(setup, k):
+    g, d, queries = setup
+    check_queries(d, g, queries, k)
+
+
+@pytest.mark.parametrize("mode", ["yen", "para_yen", "pyen"])
+def test_partial_modes_match(setup, mode):
+    """KSP-DG, KSP-DG-Yen, Para-KSP-DG must all be exact (Section 6.5)."""
+    g, d, queries = setup
+    check_queries(d, g, queries[:6], 3, partial_mode=mode)
+
+
+def test_exactness_under_updates():
+    g = grid_road_network(10, 10, seed=3)
+    d = DTLP.build(g, z=16, xi=4)
+    stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=7)
+    rng = np.random.default_rng(0)
+    for round_ in range(3):
+        eids, new_w = stream.next_batch()
+        d.apply_updates(eids, new_w)
+        qs = [
+            tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+            for _ in range(6)
+        ]
+        check_queries(d, g, qs, 3)
+
+
+def test_boundary_endpoints(setup):
+    g, d, queries = setup
+    boundary = np.nonzero(d.partition.is_boundary)[0]
+    rng = np.random.default_rng(5)
+    qs = [
+        tuple(map(int, rng.choice(boundary, size=2, replace=False)))
+        for _ in range(6)
+    ]
+    check_queries(d, g, qs, 3)
+
+
+def test_same_vertex_query(setup):
+    g, d, _ = setup
+    assert ksp_dg(d, 4, 4, 3) == [(0.0, (4,))]
+
+
+def test_partial_cache_reuse(setup):
+    g, d, queries = setup
+    cache = PartialKSPCache()
+    check_queries(d, g, queries[:6], 3, cache=cache)
+    check_queries(d, g, queries[:6], 3, cache=cache)  # warm pass still exact
+
+
+def test_termination_stats(setup):
+    """Theorem 3's stopping rule: iterations are finite and small for k=2."""
+    g, d, queries = setup
+    for s, t in queries[:6]:
+        res, stats = ksp_dg(d, s, t, 2, return_stats=True)
+        assert stats.iterations < 60
+
+
+def test_directed_graph_kspdg():
+    from repro.core.graph import Graph
+
+    rng = np.random.default_rng(9)
+    # random strongly-connected-ish directed graph: ring + chords
+    n = 40
+    u = list(range(n))
+    v = [(i + 1) % n for i in range(n)]
+    for _ in range(80):
+        a, b = rng.integers(0, n, size=2)
+        if a != b:
+            u.append(int(a))
+            v.append(int(b))
+    w = rng.uniform(1.0, 10.0, size=len(u))
+    g = Graph(n, np.array(u), np.array(v), w, directed=True)
+    d = DTLP.build(g, z=10, xi=4)
+    view = graph_view(g)
+    for _ in range(8):
+        s, t = map(int, rng.choice(n, size=2, replace=False))
+        got = ksp_dg(d, s, t, 3)
+        want = ksp(view, s, t, 3, directed=True)
+        assert [round(x, 8) for x, _ in got] == [round(x, 8) for x, _ in want]
