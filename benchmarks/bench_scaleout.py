@@ -13,7 +13,7 @@ from repro.dist.cluster import Cluster
 from .common import build_network, emit, rand_queries
 
 
-def bench_scaleout(quick=True):
+def bench_scaleout(quick=True, engine="pyen"):
     g, z = build_network("COL-s", quick)
     d = DTLP.build(g, z=z, xi=6)
     rows = []
@@ -21,7 +21,7 @@ def bench_scaleout(quick=True):
     qs = rand_queries(g, n_q, seed=1)
     base = None
     for w in [1, 2, 4, 8]:
-        cl = Cluster(d, n_workers=w, engine="pyen")
+        cl = Cluster(d, n_workers=w, engine=engine)
         t0 = time.perf_counter()
         for s, t in qs:
             cl.query(s, t, 3)
@@ -29,16 +29,18 @@ def bench_scaleout(quick=True):
         # the simulation executes workers serially on 1 CPU; model the
         # distributed wall-clock as the MAX worker busy-time (+ join)
         busy = np.array([wk.stats.tasks for wk in cl.workers], float)
+        hits = sum(wk.stats.cache_hits for wk in cl.workers)
         par_total = total * (busy.max() / max(1.0, busy.sum()))
         base = base or par_total
         rows.append(
-            dict(fig="18b/18e", workers=w, n_queries=n_q,
+            dict(fig="18b/18e", engine=engine, workers=w, n_queries=n_q,
                  serial_s=round(total, 3),
                  modeled_parallel_s=round(par_total, 3),
                  speedup=round(base / par_total, 2),
-                 task_balance=round(busy.max() / max(1e-9, busy.mean()), 2))
+                 task_balance=round(busy.max() / max(1e-9, busy.mean()), 2),
+                 cache_hit_frac=round(hits / max(1.0, busy.sum()), 3))
         )
-    return emit("scaleout", rows)
+    return emit(f"scaleout_{engine}", rows)  # one file per engine
 
 
 def bench_failure_overhead(quick=True):
@@ -61,10 +63,19 @@ def bench_failure_overhead(quick=True):
     return emit("failure_overhead", rows)
 
 
-def main(quick=True):
-    bench_scaleout(quick)
+def main(quick=True, engine=None):
+    engines = [engine] if engine else ["pyen", "dense_bf"]
+    for eng in engines:
+        bench_scaleout(quick, engine=eng)
     bench_failure_overhead(quick)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=["pyen", "dense_bf"], default=None,
+                    help="default: benchmark both engines")
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    main(quick=not a.full, engine=a.engine)

@@ -1,0 +1,16 @@
+"""repro.dist — the distributed KSP-DG runtime.
+
+Layering (host → device):
+
+* ``placement``    — LPT primary/replica placement of subgraphs on workers
+* ``cluster``      — in-process worker cluster: exact queries via
+  ``core.kspdg.ksp_dg`` + owner-aligned refine dispatch, fault handling,
+  weight maintenance, rescale, checkpoint/restore
+* ``grouped_yen``  — lockstep Yen over the [S, J, z] grouped BF batch
+* ``shard_refine`` — jax.shard_map production refine/update/allreduce
+
+``shard_refine`` (and the dense worker path) import jax; the placement
+module is numpy-only, so control-plane users can stay device-free.
+"""
+
+from .placement import Placement, place, subgraph_loads  # noqa: F401

@@ -1,0 +1,332 @@
+"""The distributed KSP-DG runtime (Section 6's KSPBolt/SubgraphBolt
+topology, in-process): a cluster of workers answers exact KSP queries by
+driving ``core.kspdg.ksp_dg`` with a refine callback that groups every
+iteration's boundary pairs by owning subgraph and dispatches the groups
+to the subgraphs' primary workers — falling back to replicas on failure
+or straggling (re-issue), raising on double failure (data loss).
+
+Two refine engines:
+
+* ``"pyen"``     — host ``core.yen`` per pair through the shared
+  ``PartialKSPCache`` (the paper's QueryBolt-side reuse);
+* ``"dense_bf"`` — the grouped [S, J, z] dense Bellman–Ford batch over
+  per-worker ``pack_subgraphs`` slabs (``dist.grouped_yen``), optionally
+  routed through a ``shard_refine.make_refine_fn`` shard_map product
+  when a device mesh is supplied.
+
+Also here: streaming weight maintenance (per-worker slab patching + DTLP
+version bump), elastic rescale, and checkpoint/restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.dtlp import DTLP
+from repro.core.kspdg import PartialKSPCache, ksp_dg, refine_groups
+from repro.core.sssp import subgraph_view
+from repro.core.yen import ksp
+
+from .placement import Placement, place, subgraph_loads
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    tasks: int = 0  # refine tasks assigned (busy-time proxy for scaleout)
+    cache_hits: int = 0
+    batches: int = 0  # grouped dense solves issued
+
+
+class Worker:
+    """One in-process worker: owns the slabs/caches of its subgraphs."""
+
+    def __init__(self, wid: int, dtlp: DTLP, gids, engine: str,
+                 solver=None, s_multiple: int = 1):
+        self.wid = wid
+        self.dtlp = dtlp
+        self.gids = set(int(g) for g in gids)
+        self.engine = engine
+        self.alive = True
+        self.slow = False
+        self.stats = WorkerStats()
+        self.cache = PartialKSPCache()
+        self.solver = solver
+        self.s_multiple = int(s_multiple)
+        self.slab = None
+        self.row_of: dict = {}
+        if engine == "dense_bf" and self.gids:
+            # a worker that owns nothing (more workers than subgraph
+            # assignments) keeps no slab; it is never routed tasks
+            from repro.engine.dense import pack_subgraphs
+
+            self.slab = pack_subgraphs(
+                dtlp.partition, dtlp.graph.w, gids=sorted(self.gids)
+            )
+            self.row_of = {int(g): i for i, g in enumerate(self.slab.gids)}
+
+    # ------------------------------------------------------------- refine
+    def execute(self, tasks, k: int) -> dict:
+        """tasks: [(gid, a, b)] with global vertex ids, all owned here.
+
+        Returns {(gid, a, b): [(dist, global-path-tuple)], ...}.
+        """
+        version = self.dtlp.graph.version
+        out: dict = {}
+        misses = []
+        for gid, a, b in tasks:
+            self.stats.tasks += 1
+            key = (version, gid, a, b, k, self.engine)
+            hit = self.cache.get(key)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                out[(gid, a, b)] = hit
+            else:
+                misses.append((gid, a, b))
+        if not misses:
+            return out
+
+        if self.engine == "pyen":
+            for gid, a, b in misses:
+                sg = self.dtlp.partition.subgraphs[gid]
+                view = subgraph_view(sg, self.dtlp.graph.w)
+                local = ksp(
+                    view, sg.g2l[a], sg.g2l[b], k,
+                    mode="pyen", directed=self.dtlp.graph.directed,
+                )
+                paths = [
+                    (d, tuple(int(sg.vertices[v]) for v in p))
+                    for d, p in local
+                ]
+                key = (version, gid, a, b, k, self.engine)
+                self.cache.put(key, paths)
+                out[(gid, a, b)] = paths
+            return out
+
+        from .grouped_yen import grouped_ksp
+
+        gk_tasks = []
+        for gid, a, b in misses:
+            sg = self.dtlp.partition.subgraphs[gid]
+            gk_tasks.append((self.row_of[gid], sg.g2l[a], sg.g2l[b]))
+        self.stats.batches += 1
+        results = grouped_ksp(
+            self.slab.adj, gk_tasks, k,
+            solver=self.solver, s_multiple=self.s_multiple,
+        )
+        for (gid, a, b), local in zip(misses, results):
+            sg = self.dtlp.partition.subgraphs[gid]
+            paths = [
+                (float(d), tuple(int(sg.vertices[v]) for v in p))
+                for d, p in local
+            ]
+            key = (version, gid, a, b, k, self.engine)
+            self.cache.put(key, paths)
+            out[(gid, a, b)] = paths
+        return out
+
+    # -------------------------------------------------------- maintenance
+    def patch_weights(self, eids: np.ndarray) -> None:
+        """Re-patch this worker's slab entries touched by updated edges."""
+        if self.slab is None:
+            return  # pyen workers read dtlp.graph.w directly
+        g = self.dtlp.graph
+        for e in np.asarray(eids, dtype=np.int64):
+            gid = int(self.dtlp.edge_owner[e])
+            row = self.row_of.get(gid)
+            if row is None:
+                continue
+            sg = self.dtlp.partition.subgraphs[gid]
+            lu = sg.g2l[int(g.edge_u[e])]
+            lv = sg.g2l[int(g.edge_v[e])]
+            # min over parallel edges between (lu, lv), like the packer
+            w_uv = self._min_weight(sg, lu, lv)
+            self.slab.adj[row, lu, lv] = w_uv
+            if not g.directed:
+                self.slab.adj[row, lv, lu] = self._min_weight(sg, lv, lu)
+
+    def _min_weight(self, sg, lu: int, lv: int) -> np.float32:
+        lo, hi = sg.indptr[lu], sg.indptr[lu + 1]
+        hits = np.nonzero(sg.nbr[lo:hi] == lv)[0]
+        return np.float32(np.min(self.dtlp.graph.w[sg.eid[lo + hits]]))
+
+
+class Cluster:
+    """In-process worker cluster with owner-aligned placement."""
+
+    def __init__(self, dtlp: DTLP, n_workers: int, engine: str = "pyen",
+                 *, mesh=None, mesh_axis=("data", "model")):
+        if engine not in ("pyen", "dense_bf"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.dtlp = dtlp
+        self.engine = engine
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.reissues = 0
+        self._build_workers(int(n_workers))
+
+    # -------------------------------------------------------------- build
+    def _build_workers(self, n_workers: int) -> None:
+        loads = subgraph_loads(self.dtlp)
+        self.placement: Placement = place(loads, n_workers)
+        solver = None
+        s_multiple = 1
+        if self.mesh is not None and self.engine == "dense_bf":
+            from .shard_refine import make_refine_fn
+
+            solver = make_refine_fn(self.mesh, axis=self.mesh_axis)
+            names = ([self.mesh_axis] if isinstance(self.mesh_axis, str)
+                     else list(self.mesh_axis))
+            s_multiple = int(np.prod([self.mesh.shape[a] for a in names]))
+        self.workers = [
+            Worker(
+                w, self.dtlp, self.placement.owned_by(w), self.engine,
+                solver=solver, s_multiple=s_multiple,
+            )
+            for w in range(n_workers)
+        ]
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.workers)
+
+    # -------------------------------------------------------------- query
+    def query(self, s: int, t: int, k: int, *, max_iterations: int = 10_000,
+              return_stats: bool = False):
+        """Exact KSP through the cluster: [(dist, path)], ascending.
+
+        ``max_iterations`` bounds one query's KSP-DG iterations (a tail
+        latency guard); when it fires the result is best-effort and the
+        stats carry ``truncated=True`` — pass ``return_stats`` to see.
+        """
+        return ksp_dg(self.dtlp, int(s), int(t), int(k),
+                      refine_fn=self._refine,
+                      max_iterations=max_iterations,
+                      return_stats=return_stats)
+
+    def _refine(self, pairs, k, home):
+        """One iteration's refine: group by subgraph, dispatch to owners."""
+        pair_gids, groups = refine_groups(self.dtlp, pairs, home)
+        by_worker: dict = {}
+        for gid, items in groups.items():
+            worker, reissued = self._route(gid)
+            if reissued:
+                self.reissues += len(items)
+            tasks = by_worker.setdefault(worker.wid, {})
+            for _, a, b in items:
+                tasks[(gid, a, b)] = None  # de-duped, order-preserving
+        results: dict = {}
+        for wid, tasks in by_worker.items():
+            results.update(self.workers[wid].execute(list(tasks), k))
+        seg_lists = []
+        for i, (a, b) in enumerate(pairs):
+            merged, seen = [], set()
+            for gid in pair_gids[i]:
+                for d, p in results.get((gid, a, b), []):
+                    if p not in seen:
+                        seen.add(p)
+                        merged.append((d, p))
+            merged.sort(key=lambda x: (x[0], x[1]))
+            seg_lists.append(merged[:k])
+        return seg_lists
+
+    def _route(self, gid: int):
+        """(worker, reissued) for one subgraph's task group."""
+        p = int(self.placement.primary[gid])
+        r = int(self.placement.replica[gid])
+        pw = self.workers[p]
+        if pw.alive and not pw.slow:
+            return pw, False
+        if r != p and self.workers[r].alive:
+            return self.workers[r], True  # replica takeover / re-issue
+        if pw.alive:
+            return pw, False  # no healthy replica: wait on the primary
+        raise RuntimeError(
+            f"subgraph {gid} unavailable: primary worker {p} and replica "
+            f"worker {r} are both dead — data loss, queries cannot be exact"
+        )
+
+    # -------------------------------------------------------------- faults
+    def _worker(self, wid: int) -> Worker:
+        if not 0 <= wid < len(self.workers):
+            raise ValueError(
+                f"worker {wid} does not exist (cluster has "
+                f"{len(self.workers)} workers)"
+            )
+        return self.workers[wid]
+
+    def kill(self, wid: int) -> None:
+        self._worker(wid).alive = False
+
+    def mark_slow(self, wid: int, flag: bool = True) -> None:
+        self._worker(wid).slow = bool(flag)
+
+    # --------------------------------------------------------- maintenance
+    def apply_updates(self, eids, new_w) -> float:
+        """Apply a weight-update batch everywhere; returns seconds."""
+        t0 = time.perf_counter()
+        eids = np.asarray(eids, dtype=np.int64)
+        self.dtlp.apply_updates(eids, np.asarray(new_w, dtype=np.float64))
+        for worker in self.workers:
+            worker.patch_weights(eids)
+        return time.perf_counter() - t0
+
+    def rebaseline(self) -> float:
+        """Re-anchor the DTLP bounds at the current weights.
+
+        Skeleton lower bounds decay as weights drift from the vfrag
+        baseline (the paper's τ-degradation) and KSP-DG iteration counts
+        — hence tail latency — blow up with them.  Weights themselves
+        don't change, so worker slabs and version-keyed caches stay
+        valid; only the control-plane index is rebuilt.  Returns seconds.
+        """
+        return self.dtlp.rebaseline()
+
+    def rescale(self, n_workers: int) -> None:
+        """Elastic rescale: re-place subgraphs onto a new worker set.
+
+        No index rebuild — only placement, slabs and caches are redone.
+        """
+        self._build_workers(int(n_workers))
+
+    # --------------------------------------------------- checkpoint/restore
+    def checkpoint(self) -> dict:
+        """A restart-sufficient snapshot: weights + cluster shape."""
+        g = self.dtlp.graph
+        return {
+            "format": 1,
+            "n_workers": self.n_workers,
+            "engine": self.engine,
+            "version": g.version,
+            "w": np.asarray(g.w, dtype=np.float64).copy(),
+        }
+
+    @classmethod
+    def restore(cls, snap: dict, graph_factory, z: int, xi: int,
+                engine: str | None = None, n_workers: int | None = None,
+                mesh=None, mesh_axis=("data", "model"),
+                **build_kw) -> "Cluster":
+        """Rebuild a cluster from ``checkpoint()`` output.
+
+        ``graph_factory`` recreates the static topology (initial
+        weights); the snapshot's weights are then replayed as one update
+        batch, so the restored cluster answers exactly like the original.
+        A device mesh is runtime configuration, not state — re-supply it
+        via ``mesh``/``mesh_axis`` to restore a shard_map refine path.
+        """
+        g = graph_factory()
+        d = DTLP.build(g, z=z, xi=xi, **build_kw)
+        cl = cls(
+            d,
+            n_workers if n_workers is not None else int(snap["n_workers"]),
+            engine=engine if engine is not None else str(snap["engine"]),
+            mesh=mesh,
+            mesh_axis=mesh_axis,
+        )
+        w = np.asarray(snap["w"], dtype=np.float64)
+        changed = np.nonzero(w != g.w)[0]
+        if changed.shape[0]:
+            cl.apply_updates(changed, w[changed])
+        return cl

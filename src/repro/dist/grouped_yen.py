@@ -1,0 +1,199 @@
+"""Lockstep Yen over the owner-aligned [S, J, z] grouped BF batch.
+
+A dense worker receives one iteration's refine tasks — (subgraph row,
+src, dst) partial-KSP problems on its packed slab — and runs ALL of them
+through Yen's deviation paradigm in lockstep: every round, every active
+task contributes its spur problems, and the whole round becomes ONE
+``bf_solve_grouped``/``bf_parents_grouped`` call with problems co-located
+next to their subgraph's adjacency row (zero gather — the layout
+``engine.dense`` was designed for, Section 6.1's SubgraphBolt batching).
+
+Exactness: per task this is exactly ``engine.yen_engine.engine_ksp`` —
+the grouping changes the schedule, not the math.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.engine.dense import INF
+from repro.engine.yen_engine import _extract, grouped_solver
+
+_INF = float(INF)
+
+
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+def _solve_round(adj, jobs, solver, s_multiple):
+    """One grouped solve.  ``jobs``: (row, spur, banned_v, banned_next, cap).
+
+    Returns per-job (dist[z], parent[z]) numpy rows, in job order.
+    Rows/problems are packed into [S', J, z] with S' the distinct slab
+    rows this round touches (padded to a jit-friendly bucket that is a
+    multiple of ``s_multiple`` — the mesh device count when the solver is
+    a shard_map refine fn).
+    """
+    z = adj.shape[-1]
+    rows = sorted({row for row, *_ in jobs})
+    pos = {r: i for i, r in enumerate(rows)}
+    per_row = [0] * len(rows)
+    slots = []
+    for row, *_ in jobs:
+        sr = pos[row]
+        slots.append((sr, per_row[sr]))
+        per_row[sr] += 1
+
+    S_ = len(rows)
+    S_pad = _pow2(S_)
+    if S_pad % s_multiple:
+        S_pad = -(-S_pad // s_multiple) * s_multiple
+    J_pad = _pow2(max(per_row))
+
+    adj_used = np.empty((S_pad, z, z), np.float32)
+    adj_used[:S_] = adj[rows]
+    adj_used[S_:] = adj[rows[0]]  # filler rows; their problems stay all-INF
+    init = np.full((S_pad, J_pad, z), _INF, np.float32)
+    bv = np.zeros((S_pad, J_pad, z), bool)
+    so = np.zeros((S_pad, J_pad, z), bool)
+    bn = np.zeros((S_pad, J_pad, z), bool)
+    cap = np.full((S_pad, J_pad), _INF, np.float32)
+    for (sr, j), (row, spur, banned_v, banned_next, job_cap) in zip(slots, jobs):
+        init[sr, j, spur] = 0.0
+        bv[sr, j] = banned_v
+        so[sr, j, spur] = True
+        bn[sr, j] = banned_next
+        cap[sr, j] = job_cap
+
+    if solver is None:
+        solver = grouped_solver(S_pad, J_pad, z)
+    dist, parent = solver(
+        jnp.asarray(adj_used), jnp.asarray(init), jnp.asarray(bv),
+        jnp.asarray(so), jnp.asarray(bn), jnp.asarray(cap),
+    )
+    dist = np.asarray(dist)
+    parent = np.asarray(parent)
+    return [(dist[sr, j], parent[sr, j]) for sr, j in slots]
+
+
+class _TaskState:
+    __slots__ = ("row", "src", "dst", "found", "found_set", "cand",
+                 "cand_set", "done")
+
+    def __init__(self, row: int, src: int, dst: int):
+        self.row = row
+        self.src = src
+        self.dst = dst
+        self.found: list = []
+        self.found_set: set = set()
+        self.cand: list = []
+        self.cand_set: set = set()
+        self.done = False
+
+    def spur_jobs(self, adj_row, k, use_cap):
+        """Next round's spur problems, exactly engine_ksp's inner loop."""
+        z = adj_row.shape[0]
+        _, prev = self.found[-1]
+        pre = [0.0]
+        for a, b in zip(prev, prev[1:]):
+            pre.append(pre[-1] + float(adj_row[a, b]))
+        jobs, meta = [], []
+        for l in range(len(prev) - 1):
+            spur = prev[l]
+            root = prev[: l + 1]
+            banned_next = np.zeros(z, bool)
+            for _, fp in self.found:
+                if len(fp) > l and fp[: l + 1] == root:
+                    banned_next[fp[l + 1]] = True
+            banned_v = np.zeros(z, bool)
+            for v in root[:-1]:
+                banned_v[v] = True
+            cap = _INF
+            if use_cap:
+                need = k - len(self.found)
+                if len(self.cand) >= need:
+                    cap = self.cand[need - 1][0] - pre[l] + 1e-9
+            jobs.append((self.row, spur, banned_v, banned_next, cap))
+            meta.append((l, spur, pre[l], prev))
+        return jobs, meta
+
+    def absorb(self, meta, results):
+        """Fold one round's spur results into the candidate list."""
+        for (l, spur, pre_l, prev), (dist, parent) in zip(meta, results):
+            if dist[self.dst] >= _INF / 2:
+                continue
+            tail = _extract(parent, spur, self.dst)
+            if tail is None:
+                continue
+            full = tuple(prev[:l]) + tuple(tail)
+            if full in self.found_set or full in self.cand_set:
+                continue
+            if len(set(full)) != len(full):
+                continue
+            self.cand_set.add(full)
+            self.cand.append((pre_l + float(dist[self.dst]), full))
+
+    def promote(self, k):
+        """Pop the best candidate into found; mark done when finished."""
+        if not self.cand:
+            self.done = True
+            return
+        self.cand.sort(key=lambda x: (x[0], x[1]))
+        best = self.cand.pop(0)
+        self.cand_set.discard(best[1])
+        self.found.append(best)
+        self.found_set.add(best[1])
+        if len(self.found) >= k:
+            self.done = True
+
+
+def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
+                s_multiple: int = 1):
+    """K shortest simple paths for a batch of same-slab tasks.
+
+    adj     : float32[S, z, z] packed slab (INF off-edges, 0 diagonal)
+    tasks   : [(slab_row, src, dst)] with local vertex ids
+    solver  : (adj, init, bv, so, bn, cap) → (dist, parent) override —
+              e.g. a ``repro.dist.shard_refine.make_refine_fn`` product;
+              default is the shape-bucketed jit solver.
+    Returns one [(dist, path-tuple)] list per task, ascending.
+    """
+    states = [_TaskState(row, src, dst) for row, src, dst in tasks]
+
+    # round 0: every task's P1 is a single unmasked solve
+    z = adj.shape[-1]
+    jobs = [(st.row, st.src, np.zeros(z, bool), np.zeros(z, bool), _INF)
+            for st in states]
+    for st, (dist, parent) in zip(states, _solve_round(adj, jobs, solver, s_multiple)):
+        if dist[st.dst] >= _INF / 2:
+            st.done = True
+            continue
+        p1 = _extract(parent, st.src, st.dst)
+        if p1 is None:
+            st.done = True
+            continue
+        st.found.append((float(dist[st.dst]), tuple(p1)))
+        st.found_set.add(tuple(p1))
+        if k <= 1:
+            st.done = True
+
+    while True:
+        active = [st for st in states if not st.done]
+        if not active:
+            break
+        jobs, metas, owners = [], [], []
+        for st in active:
+            j, m = st.spur_jobs(adj[st.row], k, use_cap)
+            jobs.extend(j)
+            metas.append(m)
+            owners.append(st)
+        results = _solve_round(adj, jobs, solver, s_multiple)
+        off = 0
+        for st, meta in zip(owners, metas):
+            st.absorb(meta, results[off : off + len(meta)])
+            off += len(meta)
+            st.promote(k)
+    return [st.found for st in states]

@@ -43,9 +43,19 @@ class SubgraphSlab:
         return int(self.adj.shape[0])
 
 
-def pack_subgraphs(partition, weights, z_pad: int | None = None) -> SubgraphSlab:
-    """Dense-pack every subgraph of a core Partition under `weights`."""
+def pack_subgraphs(
+    partition, weights, z_pad: int | None = None, gids=None
+) -> SubgraphSlab:
+    """Dense-pack subgraphs of a core Partition under `weights`.
+
+    ``gids`` selects a subset (a worker packs only the subgraphs it owns
+    in the distributed runtime); default packs every subgraph.
+    """
     subs = partition.subgraphs
+    if gids is not None:
+        subs = [partition.subgraphs[g] for g in gids]
+    if not subs:
+        raise ValueError("pack_subgraphs needs at least one subgraph")
     z = max(sg.nv for sg in subs)
     if z_pad is not None:
         z = max(z, z_pad)

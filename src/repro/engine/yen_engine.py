@@ -19,7 +19,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .dense import INF, bf_parents, bf_solve
+from .dense import (
+    INF,
+    bf_parents,
+    bf_parents_grouped,
+    bf_solve,
+    bf_solve_grouped,
+)
 
 _INF = float(INF)
 
@@ -47,6 +53,23 @@ def _jit_solver(P, z):
         adj = jnp.broadcast_to(adj2d[None], (P, z, z))
         dist, _ = bf_solve(adj, init, bv, so, bn, cap=cap)
         parent = bf_parents(adj, dist, so, bn)
+        return dist, parent
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def grouped_solver(S, J, z):
+    """Shape-bucketed jitted grouped (solve + parents) over the
+    owner-aligned [S, J, z] slab layout: J spur problems per subgraph
+    relaxed against adj [S, z, z] with zero gather.  The distributed
+    dense worker path (repro.dist.grouped_yen) dispatches through this;
+    callers bucket S and J so varying batch shapes reuse compilations."""
+
+    @jax.jit
+    def run(adj, init, bv, so, bn, cap):
+        dist, _ = bf_solve_grouped(adj, init, bv, so, bn, cap=cap)
+        parent = bf_parents_grouped(adj, dist, so, bn)
         return dist, parent
 
     return run

@@ -32,8 +32,27 @@ def main():
     ap.add_argument("--tau", type=float, default=0.5)
     ap.add_argument("--kill", type=int, default=None, help="kill this worker after epoch 1")
     ap.add_argument("--engine", choices=["dense_bf", "pyen"], default="pyen")
+    ap.add_argument(
+        "--mesh", action="store_true",
+        help="route the dense refine through jax.shard_map over the device "
+        "mesh (implies --engine dense_bf)",
+    )
+    ap.add_argument(
+        "--rebaseline-drift", type=float, default=0.05,
+        help="re-anchor DTLP bounds when mean weight drift exceeds this "
+        "(loose bounds blow up KSP-DG iteration counts); 0 disables",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    mesh = None
+    engine = args.engine
+    if args.mesh:
+        import jax
+
+        engine = "dense_bf"  # shard_map refine is a dense-engine path
+        mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+        print(f"shard_map refine over a {jax.device_count()}x1 device mesh")
 
     g = grid_road_network(args.rows, args.cols, seed=args.seed)
     print(f"road network: {g.n} vertices, {g.m} edges")
@@ -45,7 +64,7 @@ def main():
         f"{d.stats.n_paths} bounding paths "
         f"(EBP-II {d.stats.ebp_slots} → G-MPTree {d.stats.mptree_slots} slots)"
     )
-    cluster = Cluster(d, n_workers=args.workers, engine=args.engine)
+    cluster = Cluster(d, n_workers=args.workers, engine=engine, mesh=mesh)
     stream = WeightUpdateStream(g, alpha=args.alpha, tau=args.tau, seed=1)
     rng = np.random.default_rng(2)
 
@@ -54,11 +73,13 @@ def main():
             cluster.kill(args.kill)
             print(f"-- killed worker {args.kill}; replicas take over --")
         lat = []
+        truncated = 0
         for _ in range(args.queries):
             s, t = map(int, rng.choice(g.n, size=2, replace=False))
             t1 = time.time()
-            res = cluster.query(s, t, args.k)
+            res, qstats = cluster.query(s, t, args.k, return_stats=True)
             lat.append((time.time() - t1) * 1e3)
+            truncated += qstats.truncated
             assert res, (s, t)
         lat = np.array(lat)
         print(
@@ -66,6 +87,7 @@ def main():
             f"p50 {np.percentile(lat, 50):6.1f}ms  "
             f"p99 {np.percentile(lat, 99):6.1f}ms | "
             f"reissued tasks so far: {cluster.reissues}"
+            + (f" | {truncated} truncated (best-effort)" if truncated else "")
         )
         eids, new_w = stream.next_batch()
         dt = cluster.apply_updates(eids, new_w)
@@ -73,7 +95,14 @@ def main():
             f"  applied {eids.shape[0]} weight updates "
             f"(index maintenance {dt * 1e3:.1f}ms)"
         )
-    print("serving run complete — all queries exact against the snapshot")
+        drift = d.drift()
+        if args.rebaseline_drift and drift > args.rebaseline_drift:
+            dt = cluster.rebaseline()
+            print(
+                f"  drift {drift:.3f} > {args.rebaseline_drift}: "
+                f"rebaselined bounds in {dt:.2f}s"
+            )
+    print("serving run complete — non-truncated queries exact against the snapshot")
 
 
 if __name__ == "__main__":

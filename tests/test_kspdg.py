@@ -79,11 +79,93 @@ def test_same_vertex_query(setup):
     assert ksp_dg(d, 4, 4, 3) == [(0.0, (4,))]
 
 
+class TestPartialKSPCacheLRU:
+    def test_eviction_order(self):
+        c = PartialKSPCache(max_entries=3)
+        c.put("a", 1)
+        c.put("b", 2)
+        c.put("c", 3)
+        assert c.get("a") == 1  # refresh "a": "b" is now the LRU entry
+        c.put("d", 4)
+        assert c.get("b") is None
+        assert c.get("a") == 1 and c.get("c") == 3 and c.get("d") == 4
+        assert len(c) == 3
+
+    def test_put_refreshes_existing_key(self):
+        c = PartialKSPCache(max_entries=2)
+        c.put("a", 1)
+        c.put("b", 2)
+        c.put("a", 10)  # overwrite refreshes recency, must not evict
+        c.put("c", 3)
+        assert c.get("b") is None  # "b" was least recently used
+        assert c.get("a") == 10 and c.get("c") == 3
+
+    def test_version_bump_invalidation(self):
+        """ksp_dg keys include the graph version: a weight update makes
+        old entries unreachable, and a bounded cache ages them out
+        instead of flushing the live working set."""
+        g = grid_road_network(8, 8, seed=11)
+        d = DTLP.build(g, z=12, xi=4)
+        cache = PartialKSPCache(max_entries=64)
+        check_queries(d, g, [(0, g.n - 1)], 3, cache=cache)
+        v0_keys = [key for key in cache.data if key[0] == g.version]
+        assert v0_keys
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=12)
+        eids, new_w = stream.next_batch()
+        d.apply_updates(eids, new_w)
+        # post-bump queries are exact and never read stale-version entries
+        check_queries(d, g, [(0, g.n - 1)], 3, cache=cache)
+        assert any(key[0] == g.version for key in cache.data)
+        assert len(cache) <= 64
+
+
 def test_partial_cache_reuse(setup):
     g, d, queries = setup
     cache = PartialKSPCache()
     check_queries(d, g, queries[:6], 3, cache=cache)
     check_queries(d, g, queries[:6], 3, cache=cache)  # warm pass still exact
+
+
+def test_interior_endpoints_same_subgraph(setup):
+    """Both endpoints non-boundary inside the SAME subgraph: the spliced
+    skeleton must still see paths that leave and re-enter the subgraph
+    (the cluster routes these pairs to the single home worker)."""
+    g, d, _ = setup
+    ib = d.partition.is_boundary
+    checked = 0
+    for sg in d.partition.subgraphs:
+        interior = [int(v) for v in sg.vertices if not ib[v]]
+        if len(interior) >= 2:
+            check_queries(d, g, [(interior[0], interior[-1])], 4)
+            checked += 1
+        if checked == 3:
+            break
+    assert checked, "partition has no subgraph with two interior vertices"
+
+
+def test_k_exceeds_simple_path_count():
+    """k larger than the number of existing simple paths: ksp_dg must
+    return them all and terminate (no padding, no spin)."""
+    from repro.core.graph import Graph
+
+    # path graph 0-1-2-3-4: exactly ONE simple path end to end
+    u = np.array([0, 1, 2, 3])
+    v = np.array([1, 2, 3, 4])
+    w = np.array([1.0, 2.0, 3.0, 4.0])
+    g = Graph(5, u, v, w)
+    d = DTLP.build(g, z=2, xi=3)
+    assert ksp_dg(d, 0, 4, 5) == [(10.0, (0, 1, 2, 3, 4))]
+
+    # diamond with a pendant: exactly two simple 0→3 paths
+    u2 = np.array([0, 1, 0, 2, 2])
+    v2 = np.array([1, 2, 2, 3, 4])
+    w2 = np.array([1.0, 1.0, 2.5, 1.0, 1.0])
+    g2 = Graph(5, u2, v2, w2)
+    d2 = DTLP.build(g2, z=3, xi=3)
+    got = ksp_dg(d2, 0, 3, 10)
+    view = graph_view(g2)
+    assert got == ksp(view, 0, 3, 10)
+    assert len(got) == 2
 
 
 def test_termination_stats(setup):
