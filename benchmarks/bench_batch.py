@@ -1,0 +1,99 @@
+"""Cross-query batching throughput: queries/sec vs concurrency.
+
+The QueryScheduler merges concurrent queries' refine tasks into shared
+per-worker grouped solves, so the dense engine's [S, J, z] slab solves
+run at multi-query occupancy — per-solve fixed cost (dispatch + jit-call
+overhead) amortizes across queries, and cross-query de-dup removes
+repeated boundary-pair tasks outright.  This benchmark measures the
+effect directly: the same query set served at increasing ``max_in_flight``
+on a fresh cluster each time (cold worker caches; jit caches warmed by a
+prior throwaway run, as in production steady state).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.dtlp import DTLP
+from repro.dist.cluster import Cluster
+from repro.dist.scheduler import QueryScheduler
+
+from .common import build_network, emit, rand_queries
+
+CONCURRENCIES = [1, 2, 4, 8]
+
+
+def _serve(dtlp, engine, workers, qs, k, concurrency):
+    """One timed pass: fresh cluster (cold caches), warm jit buckets."""
+    cl = Cluster(dtlp, n_workers=workers, engine=engine)
+    sched = QueryScheduler(cl, max_in_flight=concurrency)
+    t0 = time.perf_counter()
+    tickets = sched.run(qs, k)
+    total = time.perf_counter() - t0
+    assert all(tk.done for tk in tickets)
+    return cl, sched, tickets, total
+
+
+def bench_batch(quick=True, engine=None, smoke=False):
+    engines = [engine] if engine else ["pyen", "dense_bf"]
+    if smoke:
+        g, z = build_network("NY-s", True)
+        n_q, workers, k = 6, 2, 3
+    else:
+        g, z = build_network("NY-s" if quick else "COL-s", quick)
+        n_q, workers, k = (32 if quick else 80), 4, 3
+    d = DTLP.build(g, z=z, xi=4)
+    qs = rand_queries(g, n_q, seed=3)
+    repeat = 1 if smoke else 5
+    rows = []
+    for eng in engines:
+        # warm the shape-bucketed jit solvers at every concurrency level
+        # (throwaway clusters) so timed runs measure steady-state serving
+        for c in CONCURRENCIES:
+            _serve(d, eng, workers, qs, k, c)
+        # best of `repeat` passes per level, each on a fresh (cold-cache)
+        # cluster; repeats INTERLEAVED across levels so slow machine
+        # phases (GC, other load) bias every concurrency equally
+        best: dict = {}
+        for _ in range(repeat):
+            for c in CONCURRENCIES:
+                run = _serve(d, eng, workers, qs, k, c)
+                if c not in best or run[-1] < best[c][-1]:
+                    best[c] = run
+        for c in CONCURRENCIES:
+            cl, sched, tickets, total = best[c]
+            st = sched.stats
+            solves = sum(w.stats.batches for w in cl.workers)
+            lat = sorted(tk.latency for tk in tickets)
+            rows.append(
+                dict(
+                    fig="batch", engine=eng, concurrency=c, n_queries=n_q,
+                    workers=workers, total_s=round(total, 3),
+                    qps=round(n_q / total, 2),
+                    p50_ms=round(lat[len(lat) // 2] * 1e3, 1),
+                    ticks=st.ticks,
+                    grouped_solves=solves,
+                    tasks_dispatched=st.tasks_dispatched,
+                    dedup_frac=round(
+                        st.tasks_deduped / max(1, st.tasks_requested), 4
+                    ),
+                )
+            )
+    return emit("batch", rows)
+
+
+def main(quick=True, engine=None, smoke=False):
+    bench_batch(quick, engine=engine, smoke=smoke)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=["pyen", "dense_bf"], default=None,
+                    help="default: benchmark both engines")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run that just exercises the batched path")
+    a = ap.parse_args()
+    main(quick=not a.full, engine=a.engine, smoke=a.smoke)

@@ -19,6 +19,7 @@ def main() -> None:
 
     from . import (
         bench_baselines,
+        bench_batch,
         bench_dtlp,
         bench_engine,
         bench_query,
@@ -31,6 +32,7 @@ def main() -> None:
         "baselines": bench_baselines.main,  # paper Fig 17
         "scaleout": bench_scaleout.main,    # paper Fig 18
         "engine": bench_engine.main,        # TPU data plane micro-bench
+        "batch": bench_batch.main,          # cross-query batched serving
     }
     t0 = time.time()
     for name, fn in suites.items():

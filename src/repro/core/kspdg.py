@@ -84,9 +84,10 @@ def _extended_skeleton(dtlp: DTLP, s: int, t: int):
     skel = dtlp.skeleton
     base = skel.view()
     g2s = skel.g2s
+    directed = dtlp.graph.directed
     extra_vertices: list[int] = []
     extra_index: dict[int, int] = {}  # global id → position in extra_vertices
-    extra_edges: list[tuple[int, int, float]] = []  # (ext_i, ext_j, w)
+    extra_edges: list[tuple[int, int, float]] = []  # oriented (gu, gv, w)
     home: dict = {}
 
     def ext_id(gv: int) -> int:
@@ -107,30 +108,44 @@ def _extended_skeleton(dtlp: DTLP, s: int, t: int):
         extra_vertices.append(endpoint)
         sg = dtlp.partition.subgraphs[gid]
         view = subgraph_view(sg, dtlp.graph.w)
+        # splice direction: s needs s→boundary distances (forward search);
+        # t needs boundary→t distances, which on a directed graph come
+        # from a Dijkstra over the REVERSED subgraph
+        incoming = directed and endpoint == t
+        if incoming:
+            view = view.reversed()
         lsrc = sg.g2l[endpoint]
         dist, _, _ = dijkstra(view, lsrc)
         for lb in sg.boundary_local:
             if np.isfinite(dist[lb]):
-                extra_edges.append((endpoint, int(sg.vertices[lb]), float(dist[lb])))
+                gb = int(sg.vertices[lb])
+                if incoming:
+                    extra_edges.append((gb, endpoint, float(dist[lb])))
+                else:
+                    extra_edges.append((endpoint, gb, float(dist[lb])))
         other = t if endpoint == s else s
         if other in sg.g2l and other != endpoint:
             lo = sg.g2l[other]
             if np.isfinite(dist[lo]):
-                extra_edges.append((endpoint, other, float(dist[lo])))
+                if incoming:
+                    extra_edges.append((other, endpoint, float(dist[lo])))
+                else:
+                    extra_edges.append((endpoint, other, float(dist[lo])))
 
     n_ext = base.n + len(extra_vertices)
     if extra_vertices:
-        # resolve each splice edge's endpoint ids ONCE; both directions
-        # below reuse the same arrays (no per-edge re-resolution)
-        h_src = [base.n + extra_index[u] for (u, v, w) in extra_edges]
-        h_dst = [ext_id(v) for (u, v, w) in extra_edges]
-        h_w = [w for (u, v, w) in extra_edges]
-        # both directions (undirected splice; for directed graphs the
-        # endpoint edges are still traversable the right way only if the
-        # subgraph Dijkstra ran in that direction — s outgoing, t incoming)
-        src_all = np.concatenate([base_src(base), np.array(h_src + h_dst, dtype=np.int64)])
-        dst_all = np.concatenate([base.nbr, np.array(h_dst + h_src, dtype=np.int64)])
-        w_all = np.concatenate([base.hw, np.array(h_w + h_w, dtype=np.float64)])
+        # resolve each splice edge's endpoint ids ONCE
+        h_src = np.array([ext_id(u) for (u, v, w) in extra_edges], dtype=np.int64)
+        h_dst = np.array([ext_id(v) for (u, v, w) in extra_edges], dtype=np.int64)
+        h_w = np.array([w for (u, v, w) in extra_edges], dtype=np.float64)
+        if not directed:
+            # undirected splice: each edge traversable both ways
+            h_src, h_dst = (np.concatenate([h_src, h_dst]),
+                            np.concatenate([h_dst, h_src]))
+            h_w = np.concatenate([h_w, h_w])
+        src_all = np.concatenate([base_src(base), h_src])
+        dst_all = np.concatenate([base.nbr, h_dst])
+        w_all = np.concatenate([base.hw, h_w])
         order = np.argsort(src_all, kind="stable")
         counts = np.bincount(src_all, minlength=n_ext)
         indptr = np.zeros(n_ext + 1, dtype=np.int64)
@@ -258,6 +273,76 @@ def _k_best_joins(segments: list[list[tuple[float, tuple]]], k: int):
     return out
 
 
+@dataclasses.dataclass
+class RefineRequest:
+    """One KSP-DG iteration's refine work, yielded by ``ksp_dg_stepper``.
+
+    ``pairs`` are the adjacent (a, b) global-id pairs along the current
+    reference path; the consumer must answer with one partial-KSP segment
+    list per pair (ascending ``[(dist, global-path-tuple)]``, length ≤ k)
+    via ``generator.send(seg_lists)``.  ``stats`` is the query's live
+    ``QueryStats`` so refiners can account cache hits / tasks in place.
+    """
+
+    pairs: list
+    home: dict
+    k: int
+    stats: QueryStats
+
+
+def ksp_dg_stepper(
+    dtlp: DTLP,
+    s: int,
+    t: int,
+    k: int,
+    *,
+    max_iterations: int = 10_000,
+):
+    """Resumable KSP-DG (Algorithm 1): one generator step per iteration.
+
+    Yields a :class:`RefineRequest` for each filter-phase reference path
+    and expects the matching segment lists back through ``send``; the
+    generator's return value (``StopIteration.value``) is ``(L, stats)``.
+    This inversion-of-control form lets a scheduler interleave many
+    queries' iterations in lockstep and merge their refine tasks into
+    shared grouped solves (``repro.dist.scheduler``); ``ksp_dg`` below is
+    the single-query driver over the same machinery.
+    """
+    stats = QueryStats()
+    if s == t:
+        return [(0.0, (s,))], stats
+    view, ext_id, global_of_ext, home = _extended_skeleton(dtlp, s, t)
+    es, et = ext_id(s), ext_id(t)
+    # findksp mode: one reverse SPT guides every spur search as an A*
+    # heuristic — same exact stream as yen mode, ~7x fewer heap pops on
+    # road-like skeletons (the reference stream dominates query tails)
+    refs = ksp_stream(view, es, et, None, mode="findksp", directed=dtlp.graph.directed)
+
+    L: list[tuple[float, tuple]] = []
+    L_set = set()
+    pending = next(refs, None)
+    while pending is not None and stats.iterations < max_iterations:
+        ref_d, ref_path_ext = pending
+        stats.iterations += 1
+        ref_path = [global_of_ext[v] for v in ref_path_ext]
+        pairs = list(zip(ref_path, ref_path[1:]))
+        seg_lists = yield RefineRequest(pairs=pairs, home=home, k=k, stats=stats)
+        for d, p in _k_best_joins(seg_lists, k):
+            if p not in L_set:
+                L_set.add(p)
+                L.append((d, p))
+        L.sort(key=lambda x: (x[0], x[1]))
+        for d_, p_ in L[k:]:
+            L_set.discard(p_)
+        L = L[:k]
+        pending = next(refs, None)
+        if pending is not None and len(L) >= k and L[k - 1][0] <= pending[0] + 1e-9:
+            break
+    else:
+        stats.truncated = pending is not None
+    return L, stats
+
+
 def ksp_dg(
     dtlp: DTLP,
     s: int,
@@ -278,46 +363,24 @@ def ksp_dg(
     endpoints to their single home subgraph; together with
     ``refine_groups`` it exposes the iteration's owner-aligned task
     groups, so a caller can dispatch whole groups to workers instead of
-    re-deriving ownership per pair.  Default is the in-process path above.
-    """
-    stats = QueryStats()
-    if s == t:
-        result = [(0.0, (s,))]
-        return (result, stats) if return_stats else result
-    view, ext_id, global_of_ext, home = _extended_skeleton(dtlp, s, t)
-    es, et = ext_id(s), ext_id(t)
-    # findksp mode: one reverse SPT guides every spur search as an A*
-    # heuristic — same exact stream as yen mode, ~7x fewer heap pops on
-    # road-like skeletons (the reference stream dominates query tails)
-    refs = ksp_stream(view, es, et, None, mode="findksp", directed=dtlp.graph.directed)
+    re-deriving ownership per pair.  Default is the in-process path.
 
-    L: list[tuple[float, tuple]] = []
-    L_set = set()
-    pending = next(refs, None)
-    while pending is not None and stats.iterations < max_iterations:
-        ref_d, ref_path_ext = pending
-        stats.iterations += 1
-        ref_path = [global_of_ext[v] for v in ref_path_ext]
-        pairs = list(zip(ref_path, ref_path[1:]))
+    This is a thin driver over :func:`ksp_dg_stepper` — one ``send`` per
+    iteration, with the refine computed synchronously in between.
+    """
+    stepper = ksp_dg_stepper(dtlp, s, t, k, max_iterations=max_iterations)
+    seg_lists = None
+    while True:
+        try:
+            req = stepper.send(seg_lists) if seg_lists is not None else next(stepper)
+        except StopIteration as fin:
+            L, stats = fin.value
+            return (L, stats) if return_stats else L
         if refine_fn is not None:
-            seg_lists = refine_fn(pairs, k, home)
-            stats.refine_tasks += len(pairs)
+            seg_lists = refine_fn(req.pairs, k, req.home)
+            req.stats.refine_tasks += len(req.pairs)
         else:
             seg_lists = [
-                _partial_ksps(dtlp, a, b, k, partial_mode, cache, stats, home)
-                for a, b in pairs
+                _partial_ksps(dtlp, a, b, k, partial_mode, cache, req.stats, req.home)
+                for a, b in req.pairs
             ]
-        for d, p in _k_best_joins(seg_lists, k):
-            if p not in L_set:
-                L_set.add(p)
-                L.append((d, p))
-        L.sort(key=lambda x: (x[0], x[1]))
-        for d_, p_ in L[k:]:
-            L_set.discard(p_)
-        L = L[:k]
-        pending = next(refs, None)
-        if pending is not None and len(L) >= k and L[k - 1][0] <= pending[0] + 1e-9:
-            break
-    else:
-        stats.truncated = pending is not None
-    return (L, stats) if return_stats else L

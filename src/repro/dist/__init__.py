@@ -7,6 +7,9 @@ Layering (host → device):
   ``core.kspdg.ksp_dg`` + owner-aligned refine dispatch, fault handling,
   weight maintenance, rescale, checkpoint/restore
 * ``grouped_yen``  — lockstep Yen over the [S, J, z] grouped BF batch
+* ``scheduler``    — cross-query batched serving: concurrent queries run
+  as lockstep steppers whose refine tasks are merged (de-duped) into
+  shared per-worker grouped solves, behind a bounded admission queue
 * ``shard_refine`` — jax.shard_map production refine/update/allreduce
 
 ``shard_refine`` (and the dense worker path) import jax; the placement

@@ -33,6 +33,28 @@ from repro.core.yen import ksp
 from .placement import Placement, place, subgraph_loads
 
 
+def merge_segments(pairs, pair_gids, results, k):
+    """Per-pair segment lists from owner-keyed partial results.
+
+    ``results`` maps (gid, a, b) → [(dist, global-path)]; a pair covered
+    by several subgraphs merges their lists de-duped, ascending, top-k.
+    Shared by the per-query refine below and the cross-query batched
+    scatter in ``dist.scheduler`` — both must produce byte-identical
+    segment lists for the two serving paths to agree path-for-path.
+    """
+    seg_lists = []
+    for i, (a, b) in enumerate(pairs):
+        merged, seen = [], set()
+        for gid in pair_gids[i]:
+            for d, p in results.get((gid, a, b), []):
+                if p not in seen:
+                    seen.add(p)
+                    merged.append((d, p))
+        merged.sort(key=lambda x: (x[0], x[1]))
+        seg_lists.append(merged[:k])
+    return seg_lists
+
+
 @dataclasses.dataclass
 class WorkerStats:
     tasks: int = 0  # refine tasks assigned (busy-time proxy for scaleout)
@@ -62,8 +84,10 @@ class Worker:
             # assignments) keeps no slab; it is never routed tasks
             from repro.engine.dense import pack_subgraphs
 
+            # lane=8: the worker dispatches the jnp grouped solvers, so a
+            # tight z beats 128-lane Pallas alignment (O(z²) per problem)
             self.slab = pack_subgraphs(
-                dtlp.partition, dtlp.graph.w, gids=sorted(self.gids)
+                dtlp.partition, dtlp.graph.w, gids=sorted(self.gids), lane=8
             )
             self.row_of = {int(g): i for i, g in enumerate(self.slab.gids)}
 
@@ -211,7 +235,7 @@ class Cluster:
         pair_gids, groups = refine_groups(self.dtlp, pairs, home)
         by_worker: dict = {}
         for gid, items in groups.items():
-            worker, reissued = self._route(gid)
+            worker, reissued = self.route(gid)
             if reissued:
                 self.reissues += len(items)
             tasks = by_worker.setdefault(worker.wid, {})
@@ -220,19 +244,9 @@ class Cluster:
         results: dict = {}
         for wid, tasks in by_worker.items():
             results.update(self.workers[wid].execute(list(tasks), k))
-        seg_lists = []
-        for i, (a, b) in enumerate(pairs):
-            merged, seen = [], set()
-            for gid in pair_gids[i]:
-                for d, p in results.get((gid, a, b), []):
-                    if p not in seen:
-                        seen.add(p)
-                        merged.append((d, p))
-            merged.sort(key=lambda x: (x[0], x[1]))
-            seg_lists.append(merged[:k])
-        return seg_lists
+        return merge_segments(pairs, pair_gids, results, k)
 
-    def _route(self, gid: int):
+    def route(self, gid: int):
         """(worker, reissued) for one subgraph's task group."""
         p = int(self.placement.primary[gid])
         r = int(self.placement.replica[gid])

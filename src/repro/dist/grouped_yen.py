@@ -28,34 +28,69 @@ def _pow2(n: int) -> int:
     return 1 << (n - 1).bit_length() if n > 1 else 1
 
 
+def _bucket_shape(per_row_counts, s_multiple):
+    """Pick the [S_pad, J_pad] bucket minimizing padded area.
+
+    A row with more jobs than ``J_pad`` is split across duplicate slab
+    rows, so the padded problem count is Σ ceil(n_r / J) · J instead of
+    n_rows · max(n_r) — without the split, one hot subgraph (the common
+    case when many concurrent queries cross the same boundary region)
+    inflates EVERY row to its pow2-rounded max and the merged batch costs
+    more compute than the per-query solves it replaced.  Candidates stay
+    pow2 (and S a multiple of ``s_multiple``) so shapes reuse jit buckets.
+    """
+    j_max = _pow2(max(per_row_counts))
+    best = None
+    j = 1
+    while j <= j_max:
+        s_need = sum(-(-n // j) for n in per_row_counts)
+        s_pad = _pow2(s_need)
+        if s_pad % s_multiple:
+            s_pad = -(-s_pad // s_multiple) * s_multiple
+        # padded relax compute ∝ S·J; the +1 term charges the [S, z, z]
+        # adjacency duplication/transfer that row-splitting adds
+        cost = s_pad * (j + 1)
+        if best is None or cost < best[0]:
+            best = (cost, s_pad, j)
+        j *= 2
+    _, s_pad, j_pad = best
+    return s_pad, j_pad
+
+
 def _solve_round(adj, jobs, solver, s_multiple):
     """One grouped solve.  ``jobs``: (row, spur, banned_v, banned_next, cap).
 
     Returns per-job (dist[z], parent[z]) numpy rows, in job order.
-    Rows/problems are packed into [S', J, z] with S' the distinct slab
-    rows this round touches (padded to a jit-friendly bucket that is a
-    multiple of ``s_multiple`` — the mesh device count when the solver is
-    a shard_map refine fn).
+    Rows/problems are packed into [S', J, z] with S' the slab rows this
+    round touches — hot rows split across duplicates (``_bucket_shape``)
+    — padded to a jit-friendly bucket that is a multiple of
+    ``s_multiple`` (the mesh device count when the solver is a shard_map
+    refine fn).
     """
+    if not jobs:
+        return []
     z = adj.shape[-1]
-    rows = sorted({row for row, *_ in jobs})
-    pos = {r: i for i, r in enumerate(rows)}
-    per_row = [0] * len(rows)
+    counts: dict = {}
+    for row, *_ in jobs:
+        counts[row] = counts.get(row, 0) + 1
+    S_pad, J_pad = _bucket_shape(list(counts.values()), s_multiple)
+
+    slab_rows: list[int] = []  # original slab row per packed position
+    cursor: dict = {}  # row → [packed position, jobs filled there]
     slots = []
     for row, *_ in jobs:
-        sr = pos[row]
-        slots.append((sr, per_row[sr]))
-        per_row[sr] += 1
-
-    S_ = len(rows)
-    S_pad = _pow2(S_)
-    if S_pad % s_multiple:
-        S_pad = -(-S_pad // s_multiple) * s_multiple
-    J_pad = _pow2(max(per_row))
+        cur = cursor.get(row)
+        if cur is None or cur[1] == J_pad:
+            cur = [len(slab_rows), 0]
+            slab_rows.append(row)
+        slots.append((cur[0], cur[1]))
+        cur[1] += 1
+        cursor[row] = cur
+    S_ = len(slab_rows)
 
     adj_used = np.empty((S_pad, z, z), np.float32)
-    adj_used[:S_] = adj[rows]
-    adj_used[S_:] = adj[rows[0]]  # filler rows; their problems stay all-INF
+    adj_used[:S_] = adj[slab_rows]
+    adj_used[S_:] = adj[slab_rows[0]]  # filler rows; their problems stay all-INF
     init = np.full((S_pad, J_pad, z), _INF, np.float32)
     bv = np.zeros((S_pad, J_pad, z), bool)
     so = np.zeros((S_pad, J_pad, z), bool)
@@ -160,7 +195,12 @@ def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
               e.g. a ``repro.dist.shard_refine.make_refine_fn`` product;
               default is the shape-bucketed jit solver.
     Returns one [(dist, path-tuple)] list per task, ascending.
+
+    A zero-task batch returns [] — the batched dispatch path produces one
+    whenever a tick's tasks were all cache hits.
     """
+    if not tasks:
+        return []
     states = [_TaskState(row, src, dst) for row, src, dst in tasks]
 
     # round 0: every task's P1 is a single unmasked solve

@@ -1,0 +1,297 @@
+"""Cross-query batched serving: lockstep scheduling of concurrent KSP
+queries over one worker cluster.
+
+``Cluster.query`` drives one KSP-DG instance at a time, so the grouped
+[S, J, z] dense solves run at single-query occupancy.  The
+``QueryScheduler`` instead keeps N queries in flight as resumable
+steppers (``core.kspdg.ksp_dg_stepper``) and advances them in lockstep
+ticks:
+
+    tick:
+      gather   — every active query's pending RefineRequest is grouped
+                 by owning subgraph (``refine_groups``) and routed to the
+                 owner's primary worker;
+      merge    — per-worker task sets are de-duplicated ACROSS queries:
+                 two queries crossing the same boundary pair share one
+                 partial-KSP solve and one cache entry;
+      dispatch — ONE ``Worker.execute`` per worker (per distinct k), so
+                 all queries' cache misses land in the same
+                 ``grouped_ksp``/``bf_solve_grouped`` slab solve;
+      scatter  — results fan back out into per-query segment lists
+                 (``cluster.merge_segments``) and each stepper advances
+                 one KSP-DG iteration.
+
+Admission control sits on top: a bounded FIFO queue (``max_queue``), a
+cap on in-flight queries per tick (``max_in_flight``) and, in ``run``, a
+batch window that groups simulated arrivals before a tick starts.
+Answers are identical — distances, paths and tie order — to sequential
+``Cluster.query``: the stepper is the same code and ``merge_segments``
+builds the same segment lists, so batching changes the schedule, never
+the math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+
+from repro.core.kspdg import ksp_dg_stepper, refine_groups
+
+from .cluster import Cluster, merge_segments
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Aggregate scheduler counters (one instance per scheduler)."""
+
+    ticks: int = 0
+    admitted: int = 0
+    completed: int = 0
+    rejected: int = 0  # bounced by the bounded admission queue
+    tasks_requested: int = 0  # per-query (gid, a, b) tasks before merging
+    tasks_dispatched: int = 0  # after cross-query de-dup
+    max_queue_depth: int = 0
+    max_in_flight: int = 0
+
+    @property
+    def tasks_deduped(self) -> int:
+        """Tasks answered by another concurrent query's identical task."""
+        return self.tasks_requested - self.tasks_dispatched
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    """One admitted query's handle: identity, timing, and result."""
+
+    qid: int
+    s: int
+    t: int
+    k: int
+    arrival: float = 0.0  # scheduler clock at submit
+    admitted_at: float | None = None
+    finished_at: float | None = None
+    ticks: int = 0  # lockstep rounds this query participated in
+    result: list | None = None
+    stats: object = None  # core QueryStats, set on completion
+    _stepper: object = dataclasses.field(default=None, repr=False)
+    _request: object = dataclasses.field(default=None, repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self.finished_at is not None
+
+    @property
+    def latency(self) -> float | None:
+        """Queueing + service time on the scheduler clock (seconds)."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.arrival
+
+
+class QueueFull(RuntimeError):
+    """Raised by ``submit`` when the bounded admission queue is full."""
+
+
+class QueryScheduler:
+    """Lockstep cross-query batching over a ``Cluster``.
+
+    The scheduler keeps its own simulated clock: ``run`` advances it by
+    each tick's measured wall time plus the arrival process, so latency
+    percentiles reflect queueing delay under the given concurrency even
+    though execution is single-threaded in-process.
+    """
+
+    def __init__(self, cluster: Cluster, *, max_in_flight: int = 8,
+                 max_queue: int | None = None, max_iterations: int = 10_000):
+        self.cluster = cluster
+        self.max_in_flight = max(1, int(max_in_flight))
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.max_iterations = int(max_iterations)
+        self.queue: deque[QueryTicket] = deque()
+        self.active: list[QueryTicket] = []
+        self.finished: list[QueryTicket] = []
+        self.stats = BatchStats()
+        self._qid = itertools.count()
+        self.clock = 0.0
+
+    # ----------------------------------------------------------- admission
+    def submit(self, s: int, t: int, k: int, *,
+               arrival: float | None = None) -> QueryTicket:
+        """Enqueue one query; raises :class:`QueueFull` past capacity.
+
+        Capacity counts the free in-flight slots the next tick will
+        drain, not just the waiting room — a burst against an idle
+        scheduler must not bounce off a small ``max_queue``.
+
+        ``arrival`` back-dates the ticket's arrival clock for queries
+        that arrived while a tick was running (``run`` passes the trace
+        time); default is the current scheduler clock.
+        """
+        if self.max_queue is not None:
+            free = max(0, self.max_in_flight - len(self.active))
+            if len(self.queue) >= self.max_queue + free:
+                self.stats.rejected += 1
+                raise QueueFull(
+                    f"admission queue full ({len(self.queue)} waiting, "
+                    f"{free} free slots); query ({s}→{t}) rejected"
+                )
+        ticket = QueryTicket(
+            qid=next(self._qid), s=int(s), t=int(t), k=int(k),
+            arrival=self.clock if arrival is None else float(arrival),
+        )
+        self.queue.append(ticket)
+        self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                         len(self.queue))
+        return ticket
+
+    def _admit(self) -> None:
+        while self.queue and len(self.active) < self.max_in_flight:
+            tk = self.queue.popleft()
+            tk.admitted_at = self.clock
+            tk._stepper = ksp_dg_stepper(
+                self.cluster.dtlp, tk.s, tk.t, tk.k,
+                max_iterations=self.max_iterations,
+            )
+            self.stats.admitted += 1
+            self._advance(tk, None)  # prime to the first RefineRequest
+            if not tk.done:
+                self.active.append(tk)
+        self.stats.max_in_flight = max(self.stats.max_in_flight,
+                                       len(self.active))
+
+    def _advance(self, tk: QueryTicket, seg_lists) -> None:
+        """Feed one round's segment lists into a query's stepper."""
+        try:
+            if seg_lists is None:
+                tk._request = next(tk._stepper)
+            else:
+                tk._request = tk._stepper.send(seg_lists)
+        except StopIteration as fin:
+            tk.result, tk.stats = fin.value
+            tk.finished_at = self.clock
+            tk._stepper = tk._request = None
+            self.finished.append(tk)
+            self.stats.completed += 1
+
+    # ---------------------------------------------------------------- tick
+    def tick(self) -> list[QueryTicket]:
+        """One lockstep round; returns the queries that completed on it.
+
+        The whole tick — admission (stepper priming does the extended-
+        skeleton build and first reference-path search) through scatter —
+        is clocked, and completions are stamped with the POST-tick clock:
+        a query's finishing round is part of its service time.
+        """
+        t0 = time.perf_counter()
+        n_fin = len(self.finished)
+        self._admit()
+        if not self.active:
+            self.clock += time.perf_counter() - t0
+            for tk in self.finished[n_fin:]:
+                tk.finished_at = self.clock
+            return self.finished[n_fin:]
+        self.stats.ticks += 1
+        # gather: group every active query's pairs, route to workers,
+        # de-dup identical (gid, a, b) tasks across queries
+        gathered = []  # (ticket, pair_gids)
+        merged: dict = {}  # (wid, k) → {(gid, a, b): None} ordered de-dup
+        for tk in self.active:
+            req = tk._request
+            pair_gids, groups = refine_groups(self.cluster.dtlp, req.pairs,
+                                              req.home)
+            gathered.append((tk, pair_gids))
+            for gid, items in groups.items():
+                worker, reissued = self.cluster.route(gid)
+                if reissued:
+                    self.cluster.reissues += len(items)
+                tasks = merged.setdefault((worker.wid, req.k), {})
+                for _, a, b in items:
+                    self.stats.tasks_requested += 1
+                    tasks.setdefault((gid, a, b), None)
+        # dispatch: one execute per worker (per distinct k) — all queries'
+        # misses share the same grouped slab solve and cache entries
+        results: dict = {}  # k → {(gid, a, b): [(dist, path)]}
+        for (wid, k), tasks in merged.items():
+            self.stats.tasks_dispatched += len(tasks)
+            results.setdefault(k, {}).update(
+                self.cluster.workers[wid].execute(list(tasks), k)
+            )
+        # scatter: per-query segment lists, one KSP-DG step each
+        still_active = []
+        for tk, pair_gids in gathered:
+            req = tk._request
+            seg_lists = merge_segments(req.pairs, pair_gids,
+                                       results.get(req.k, {}), req.k)
+            req.stats.refine_tasks += len(req.pairs)
+            tk.ticks += 1
+            self._advance(tk, seg_lists)
+            if not tk.done:
+                still_active.append(tk)
+        self.active = still_active
+        self.clock += time.perf_counter() - t0
+        completed = self.finished[n_fin:]
+        for tk in completed:
+            tk.finished_at = self.clock
+        return completed
+
+    def drain(self) -> list[QueryTicket]:
+        """Tick until queue and in-flight set are empty; all finished."""
+        while self.queue or self.active:
+            self.tick()
+        return self.finished
+
+    # ----------------------------------------------------------- workloads
+    def run(self, queries, k: int, *, arrival_times=None,
+            batch_window: float = 0.0, reject_overflow: bool = False):
+        """Serve a trace of ``(s, t)`` queries; returns their tickets.
+
+        ``arrival_times`` gives each query's arrival on the scheduler
+        clock (seconds, ascending); ``None`` means all arrive at once.
+        The clock advances by each tick's measured wall time, so a query
+        that arrives while earlier ticks run accrues queueing latency.
+        When the scheduler is under-occupied and the next arrival is
+        within ``batch_window`` seconds, it waits (advances the clock) to
+        group arrivals into the same admission burst — the classic
+        latency-for-throughput batching knob.  ``reject_overflow`` makes
+        a full bounded queue drop queries (counted in ``stats.rejected``)
+        instead of raising.
+        """
+        queries = list(queries)
+        if arrival_times is None:
+            arrivals = [self.clock] * len(queries)
+        else:
+            arrivals = [float(a) for a in arrival_times]
+            if len(arrivals) != len(queries):
+                raise ValueError("arrival_times length != queries length")
+        tickets: list[QueryTicket] = []
+        i = 0
+
+        def submit_due(horizon):
+            nonlocal i
+            while i < len(queries) and arrivals[i] <= horizon:
+                self.clock = max(self.clock, arrivals[i])
+                s, t = queries[i]
+                try:
+                    # arrival back-dated to trace time: a query that
+                    # landed mid-tick accrues the queueing delay it
+                    # actually experienced
+                    tickets.append(self.submit(s, t, k, arrival=arrivals[i]))
+                except QueueFull:
+                    if not reject_overflow:
+                        raise
+                i += 1
+
+        while i < len(queries) or self.queue or self.active:
+            submit_due(self.clock)
+            if not self.queue and not self.active:
+                # idle: jump to the next arrival
+                self.clock = max(self.clock, arrivals[i])
+                continue
+            if (batch_window > 0.0 and i < len(queries)
+                    and len(self.active) + len(self.queue) < self.max_in_flight
+                    and arrivals[i] <= self.clock + batch_window):
+                submit_due(self.clock + batch_window)
+            self.tick()
+        return tickets

@@ -1,0 +1,45 @@
+"""Import hypothesis if available, else stub it so test modules still
+COLLECT offline: property tests skip, everything else in the module runs.
+
+Usage (instead of importing hypothesis directly):
+
+    from tests._hypothesis_compat import given, settings, st
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline container: no hypothesis wheel baked in
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+
+            skipped.__name__ = fn.__name__
+            skipped.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _AnyStrategy:
+        """st.<anything>(...) placeholder; values never reach a test body
+        because the @given stub replaces the test with a skip."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **kw: None
+
+    st = _AnyStrategy()

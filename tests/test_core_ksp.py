@@ -10,8 +10,7 @@ import itertools
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.sssp import dijkstra, extract_path, graph_view, reverse_spt
 from repro.core.yen import ksp

@@ -3,8 +3,7 @@ bound_dist vs the profile reference, engine_ksp vs core Yen."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -3,8 +3,7 @@ assert_allclose, per the kernel contract.  All run interpret=True on CPU."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -176,6 +176,34 @@ def test_termination_stats(setup):
         assert stats.iterations < 60
 
 
+def test_directed_splice_uses_reverse_distances():
+    """Regression: a spliced (non-boundary) destination on a DIRECTED
+    graph needs boundary→t splice edges from a reverse-edge Dijkstra.
+    The old forward-only splice gave t→boundary distances, so on an
+    asymmetric graph the extended skeleton had no (or wrongly weighted)
+    way INTO t — e.g. on a pure directed cycle every query ending at an
+    interior vertex returned no paths at all."""
+    from repro.core.graph import Graph
+
+    # directed 6-cycle 0→1→…→5→0, asymmetric by construction
+    u = np.arange(6)
+    v = (u + 1) % 6
+    w = np.arange(1.0, 7.0)
+    g = Graph(6, u, v, w, directed=True)
+    d = DTLP.build(g, z=3, xi=4)
+    assert not d.partition.is_boundary[1]  # t interior: the broken case
+    view = graph_view(g)
+    for s in range(6):
+        for t in range(6):
+            if s == t:
+                continue
+            got = ksp_dg(d, s, t, 3)
+            want = ksp(view, s, t, 3, directed=True)
+            assert [round(x, 8) for x, _ in got] == [
+                round(x, 8) for x, _ in want
+            ], (s, t)
+
+
 def test_directed_graph_kspdg():
     from repro.core.graph import Graph
 

@@ -1,0 +1,195 @@
+"""Cross-query batched serving: lockstep scheduler exactness vs the
+sequential cluster path, cross-query cache sharing, admission control,
+and the empty-batch guard on the grouped dense solve."""
+
+import numpy as np
+import pytest
+
+from repro.core.dtlp import DTLP
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+from repro.dist.cluster import Cluster
+from repro.dist.scheduler import QueryScheduler, QueueFull
+
+
+@pytest.fixture(scope="module")
+def net():
+    g = grid_road_network(10, 10, seed=2)
+    return g, DTLP.build(g, z=16, xi=4)
+
+
+def rand_queries(g, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+        for _ in range(n)
+    ]
+
+
+class TestBatchedExactness:
+    @pytest.mark.parametrize("engine", ["pyen", "dense_bf"])
+    @pytest.mark.parametrize("concurrency", [2, 5])
+    def test_matches_sequential(self, net, engine, concurrency):
+        """Batched answers equal Cluster.query path-for-path, including
+        distances and tie order — batching changes the schedule only."""
+        g, d = net
+        qs = rand_queries(g, 10, seed=1)
+        seq = Cluster(d, n_workers=4, engine=engine)
+        want = [seq.query(s, t, 3) for s, t in qs]
+        sched = QueryScheduler(
+            Cluster(d, n_workers=4, engine=engine),
+            max_in_flight=concurrency,
+        )
+        tickets = sched.run(qs, 3)
+        assert [tk.result for tk in tickets] == want
+        assert all(tk.done for tk in tickets)
+        assert sched.stats.completed == len(qs)
+        assert sched.stats.max_in_flight <= concurrency
+
+    def test_matches_sequential_under_updates(self, net):
+        """Exactness holds across weight-update version bumps."""
+        g, d = net
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=5)
+        seq = Cluster(d, n_workers=4, engine="pyen")
+        bat = Cluster(d, n_workers=4, engine="pyen")
+        sched = QueryScheduler(bat, max_in_flight=4)
+        for round_ in range(2):
+            eids, new_w = stream.next_batch()
+            seq.apply_updates(eids, new_w)
+            bat.apply_updates(eids, new_w)
+            qs = rand_queries(g, 6, seed=round_ + 20)
+            want = [seq.query(s, t, 3) for s, t in qs]
+            got = [tk.result for tk in sched.run(qs, 3)]
+            assert got == want
+
+    def test_mixed_k_batches(self, net):
+        """Queries with different k merge per (worker, k) and stay exact."""
+        g, d = net
+        qs = rand_queries(g, 6, seed=7)
+        seq = Cluster(d, n_workers=3, engine="pyen")
+        want = [seq.query(s, t, 2 + i % 3) for i, (s, t) in enumerate(qs)]
+        sched = QueryScheduler(Cluster(d, n_workers=3, engine="pyen"),
+                               max_in_flight=6)
+        tickets = [sched.submit(s, t, 2 + i % 3)
+                   for i, (s, t) in enumerate(qs)]
+        sched.drain()
+        assert [tk.result for tk in tickets] == want
+
+    def test_same_vertex_and_repeated_queries(self, net):
+        g, d = net
+        sched = QueryScheduler(Cluster(d, n_workers=2, engine="pyen"),
+                               max_in_flight=4)
+        tickets = sched.run([(5, 5), (0, 9), (0, 9)], 3)
+        assert tickets[0].result == [(0.0, (5,))]
+        assert tickets[1].result == tickets[2].result
+
+
+class TestCacheSharing:
+    def test_cross_query_dedup_reduces_worker_tasks(self, net):
+        """Two concurrent queries crossing the same boundary pairs must
+        share solves: identical queries in lockstep produce identical
+        refine groups each tick, so the merged per-worker task sets stay
+        the size of ONE query's — measurably fewer WorkerStats.tasks
+        than serving the pair sequentially."""
+        g, d = net
+        s, t = rand_queries(g, 1, seed=9)[0]
+        seq = Cluster(d, n_workers=4, engine="pyen")
+        seq.query(s, t, 3)
+        seq.query(s, t, 3)
+        seq_tasks = sum(w.stats.tasks for w in seq.workers)
+
+        bat = Cluster(d, n_workers=4, engine="pyen")
+        sched = QueryScheduler(bat, max_in_flight=2)
+        tickets = sched.run([(s, t), (s, t)], 3)
+        bat_tasks = sum(w.stats.tasks for w in bat.workers)
+
+        assert tickets[0].result == tickets[1].result
+        assert sched.stats.tasks_deduped > 0
+        assert bat_tasks < seq_tasks
+        # lockstep twins fully collapse: one query's worth of tasks
+        assert bat_tasks * 2 == seq_tasks
+
+    def test_dedup_stats_on_random_workload(self, net):
+        g, d = net
+        qs = rand_queries(g, 8, seed=11) * 2  # guaranteed overlap
+        sched = QueryScheduler(Cluster(d, n_workers=4, engine="pyen"),
+                               max_in_flight=8)
+        sched.run(qs, 3)
+        st = sched.stats
+        assert st.tasks_dispatched < st.tasks_requested
+        assert st.tasks_deduped == st.tasks_requested - st.tasks_dispatched
+
+
+class TestAdmissionControl:
+    def test_bounded_queue_rejects(self, net):
+        """Capacity = max_queue + free in-flight slots: an idle scheduler
+        accepts a burst it can admit next tick; only true overflow
+        bounces."""
+        g, d = net
+        sched = QueryScheduler(Cluster(d, n_workers=2, engine="pyen"),
+                               max_in_flight=1, max_queue=2)
+        sched.submit(0, 9, 2)   # will fill the single in-flight slot
+        sched.submit(1, 8, 2)   # waiting 1/2
+        sched.submit(2, 7, 2)   # waiting 2/2
+        with pytest.raises(QueueFull):
+            sched.submit(3, 6, 2)
+        assert sched.stats.rejected == 1
+        done = sched.drain()
+        assert len(done) == 3 and all(tk.result for tk in done)
+
+    def test_run_reject_overflow_counts(self, net):
+        g, d = net
+        qs = rand_queries(g, 6, seed=13)
+        sched = QueryScheduler(Cluster(d, n_workers=2, engine="pyen"),
+                               max_in_flight=1, max_queue=1)
+        tickets = sched.run(qs, 2, reject_overflow=True)
+        assert len(tickets) + sched.stats.rejected == len(qs)
+        assert all(tk.done for tk in tickets)
+
+    def test_latency_accounting_and_batch_window(self, net):
+        """Arrivals inside the batch window join the same admission
+        burst; every ticket's clocks are consistent."""
+        g, d = net
+        qs = rand_queries(g, 5, seed=15)
+        arrivals = [0.0, 1e-4, 2e-4, 3e-4, 4e-4]
+        sched = QueryScheduler(Cluster(d, n_workers=2, engine="pyen"),
+                               max_in_flight=4)
+        tickets = sched.run(qs, 2, arrival_times=arrivals, batch_window=1.0)
+        # window >> spread: all five grouped into the first bursts
+        assert sched.stats.max_in_flight == 4
+        for tk in tickets:
+            assert tk.done
+            assert tk.admitted_at >= tk.arrival
+            assert tk.finished_at >= tk.admitted_at
+            assert tk.latency >= 0.0
+        # queue depth was actually observed
+        assert sched.stats.max_queue_depth >= 1
+
+
+class TestEmptyBatch:
+    def test_grouped_ksp_zero_tasks(self):
+        """Regression: an all-cache-hit tick dispatches zero tasks; the
+        grouped solve must return [] instead of max()-ing an empty list."""
+        from repro.dist.grouped_yen import grouped_ksp
+
+        z = 4
+        adj = np.full((1, z, z), 3.0e38, np.float32)
+        np.fill_diagonal(adj[0], 0.0)
+        assert grouped_ksp(adj, [], 3) == []
+
+    def test_solve_round_zero_jobs(self):
+        from repro.dist.grouped_yen import _solve_round
+
+        adj = np.zeros((1, 2, 2), np.float32)
+        assert _solve_round(adj, [], None, 1) == []
+
+    def test_all_hit_tick_through_worker(self, net):
+        """End to end: serving the same query twice back-to-back makes
+        the second pass all cache hits on every worker."""
+        g, d = net
+        cl = Cluster(d, n_workers=2, engine="dense_bf")
+        s, t = rand_queries(g, 1, seed=17)[0]
+        first = cl.query(s, t, 3)
+        hits_before = sum(w.stats.cache_hits for w in cl.workers)
+        again = cl.query(s, t, 3)
+        assert first == again
+        assert sum(w.stats.cache_hits for w in cl.workers) > hits_before

@@ -3,8 +3,7 @@ data-pipeline determinism, neighbor sampler, embedding bag."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
