@@ -1,5 +1,7 @@
 """Paper Fig 18: horizontal scalability — DTLP build and KSP-DG query
-throughput vs #workers, plus relative speedup; fault-injection overhead."""
+throughput vs #workers, plus relative speedup; fault-injection overhead.
+Serving goes through the ``KSPService`` facade (sequential config:
+``max_in_flight=1``), the same entry point production uses."""
 
 from __future__ import annotations
 
@@ -8,9 +10,18 @@ import time
 import numpy as np
 
 from repro.core.dtlp import DTLP
-from repro.dist.cluster import Cluster
+from repro.service import KSPService, ServiceConfig
 
 from .common import build_network, emit, rand_queries
+
+
+def _service(dtlp, engine, workers):
+    # sequential serving, auto-straggler off: this measures scaling, so
+    # a mid-run re-route would corrupt the per-worker busy-time model
+    return KSPService(dtlp, ServiceConfig(
+        engine=engine, n_workers=workers, max_in_flight=1,
+        straggler_factor=None,
+    ))
 
 
 def bench_scaleout(quick=True, engine="pyen"):
@@ -21,15 +32,17 @@ def bench_scaleout(quick=True, engine="pyen"):
     qs = rand_queries(g, n_q, seed=1)
     base = None
     for w in [1, 2, 4, 8]:
-        cl = Cluster(d, n_workers=w, engine=engine)
+        svc = _service(d, engine, w)
         t0 = time.perf_counter()
         for s, t in qs:
-            cl.query(s, t, 3)
+            svc.query(s, t, 3)
         total = time.perf_counter() - t0
         # the simulation executes workers serially on 1 CPU; model the
         # distributed wall-clock as the MAX worker busy-time (+ join)
-        busy = np.array([wk.stats.tasks for wk in cl.workers], float)
-        hits = sum(wk.stats.cache_hits for wk in cl.workers)
+        busy = np.array(
+            [wk.stats.tasks for wk in svc.cluster.workers], float
+        )
+        hits = sum(wk.stats.cache_hits for wk in svc.cluster.workers)
         par_total = total * (busy.max() / max(1.0, busy.sum()))
         base = base or par_total
         rows.append(
@@ -49,17 +62,17 @@ def bench_failure_overhead(quick=True):
     rows = []
     qs = rand_queries(g, 6 if quick else 50, seed=2)
     for scenario in ["healthy", "1-dead", "1-straggler"]:
-        cl = Cluster(d, n_workers=4, engine="pyen")
+        svc = _service(d, "pyen", 4)
         if scenario == "1-dead":
-            cl.kill(1)
+            svc.kill(1)
         elif scenario == "1-straggler":
-            cl.mark_slow(1)
+            svc.mark_slow(1)
         t0 = time.perf_counter()
         for s, t in qs:
-            cl.query(s, t, 3)
+            svc.query(s, t, 3)
         rows.append(dict(fig="fault", scenario=scenario,
                          total_s=round(time.perf_counter() - t0, 3),
-                         reissued=cl.reissues))
+                         reissued=svc.reissues))
     return emit("failure_overhead", rows)
 
 
@@ -73,8 +86,10 @@ def main(quick=True, engine=None):
 if __name__ == "__main__":
     import argparse
 
+    from repro.service import available_engines
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=["pyen", "dense_bf"], default=None,
+    ap.add_argument("--engine", choices=available_engines(), default=None,
                     help="default: benchmark both engines")
     ap.add_argument("--full", action="store_true")
     a = ap.parse_args()

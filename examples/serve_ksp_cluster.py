@@ -1,55 +1,73 @@
 """End-to-end driver (the paper's kind: SERVING batched requests): a
-worker cluster answers concurrent KSP queries over a dynamic road network
-while weights stream in, a worker dies mid-run, and an elastic rescale
-adds capacity — all queries stay exact.
+KSPService answers concurrent KSP queries over a dynamic road network
+while weights stream in, a worker dies mid-run and is later revived
+(re-syncing the update batches it missed), an elastic rescale adds
+capacity, and a checkpoint round-trips — all queries stay exact and
+every answer names the graph epoch that served it.
 
     PYTHONPATH=src python examples/serve_ksp_cluster.py
 """
 
-import time
-
 import numpy as np
 
-from repro.core.dtlp import DTLP
 from repro.core.sssp import graph_view
 from repro.core.yen import ksp
 from repro.data.roadnet import WeightUpdateStream, grid_road_network
-from repro.dist.cluster import Cluster
+
+# --- quickstart (mirrored in README.md) ------------------------------
+from repro.service import KSPService, QueryRequest, ServiceConfig, UpdateBatch
 
 g = grid_road_network(12, 12, seed=3)
-d = DTLP.build(g, z=20, xi=5)
-cluster = Cluster(d, n_workers=6, engine="pyen")
+svc = KSPService.build(g, ServiceConfig(engine="pyen", n_workers=6,
+                                        z=20, xi=5))
+res = svc.query(3, g.n - 2, k=3)          # exact [(dist, path), ...]
+print(f"k=3 answer at epoch {res.epoch}: best {res.paths[0][0]:.1f}")
+svc.update(UpdateBatch(eids=np.array([0]),  # Δw stream, epoch barrier
+                       new_w=np.array([g.w[0] * 1.5])))
+res = svc.query(3, g.n - 2, k=3)          # now answered at epoch 1
+print(f"same query at epoch {res.epoch}: best {res.paths[0][0]:.1f}")
+# ---------------------------------------------------------------------
+
 stream = WeightUpdateStream(g, alpha=0.4, tau=0.5, seed=4)
 rng = np.random.default_rng(5)
-
 print(f"{g.n}-vertex network on 6 workers "
-      f"({d.partition.n_subgraphs} subgraphs, LPT-balanced)")
+      f"({svc.dtlp.partition.n_subgraphs} subgraphs, LPT-balanced)")
 
-for epoch in range(4):
-    if epoch == 1:
-        cluster.kill(2)
+for round_ in range(4):
+    if round_ == 1:
+        svc.kill(2)
         print("-- worker 2 killed: replica owners take over --")
-    if epoch == 2:
-        cluster.rescale(9)
+    if round_ == 2:
+        svc.revive(2)
+        print("-- worker 2 revived: it re-syncs the batch it missed "
+              "before serving again --")
+    if round_ == 3:
+        svc.rescale(9)
         print("-- elastic rescale 6 → 9 workers (no index rebuild) --")
-    t0 = time.time()
-    n_q = 15
     view = graph_view(g)
-    for _ in range(n_q):
-        s, t = map(int, rng.choice(g.n, size=2, replace=False))
-        got = cluster.query(s, t, 3)
-        want = ksp(view, s, t, 3)
-        assert [round(x, 6) for x, _ in got] == [round(x, 6) for x, _ in want]
-    ms = (time.time() - t0) / n_q * 1e3
-    print(f"epoch {epoch}: {n_q} queries exact, {ms:.1f}ms/query, "
-          f"reissues={cluster.reissues}")
-    eids, new_w = stream.next_batch()
-    cluster.apply_updates(eids, new_w)
+    reqs = [
+        QueryRequest(*map(int, rng.choice(g.n, size=2, replace=False)), k=3)
+        for _ in range(15)
+    ]
+    tickets = svc.replay(reqs)
+    for tk in tickets:
+        want = ksp(view, tk.request.s, tk.request.t, 3)
+        assert [round(x, 6) for x, _ in tk.result.paths] == \
+            [round(x, 6) for x, _ in want]
+        assert tk.result.epoch == svc.epoch
+    lat = sorted(tk.result.latency_ms for tk in tickets)
+    print(f"round {round_} (epoch {svc.epoch}): {len(tickets)} queries "
+          f"exact, p50 {lat[len(lat) // 2]:.1f}ms, "
+          f"reissues={svc.reissues}, resyncs={svc.resyncs}")
+    svc.update(UpdateBatch(*stream.next_batch()))
 
-snap = cluster.checkpoint()
-restored = Cluster.restore(
-    snap, lambda: grid_road_network(12, 12, seed=3), z=20, xi=5, engine="pyen"
+snap = svc.checkpoint()
+restored = KSPService.restore(
+    snap, lambda: grid_road_network(12, 12, seed=3),
+    ServiceConfig(engine="pyen", n_workers=9, z=20, xi=5),
 )
 s, t = 3, g.n - 2
-assert restored.query(s, t, 2) == cluster.query(s, t, 2)
-print("checkpoint → restore → identical answers. serving driver OK")
+a, b = restored.query(s, t, 2), svc.query(s, t, 2)
+assert a.paths == b.paths and a.epoch == b.epoch
+print(f"checkpoint → restore → identical answers at epoch {a.epoch}. "
+      "serving driver OK")

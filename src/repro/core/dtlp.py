@@ -183,12 +183,14 @@ class DTLP:
         xi: int,
         lbd_mode: str,
         stats: BuildStats,
+        z: int | None = None,
     ):
         self.graph = graph
         self.partition = partition
         self.sub_indexes = sub_indexes
         self.skeleton = skeleton
         self.edge_owner = edge_owner
+        self.z = z  # partition size bound the index was built with
         self.xi = xi
         self.lbd_mode = lbd_mode
         self.stats = stats
@@ -246,7 +248,8 @@ class DTLP:
         stats.skeleton_s = time.perf_counter() - t0
         stats.n_paths = sum(si.path_phi.shape[0] for si in sub_indexes)
         stats.n_pairs = sum(si.pairs.shape[0] for si in sub_indexes)
-        return cls(graph, part, sub_indexes, skeleton, edge_owner, xi, lbd_mode, stats)
+        return cls(graph, part, sub_indexes, skeleton, edge_owner, xi,
+                   lbd_mode, stats, z=int(z))
 
     # ------------------------------------------------------- maintenance
     def apply_updates(self, eids: np.ndarray, new_w: np.ndarray) -> float:
@@ -268,6 +271,12 @@ class DTLP:
         return time.perf_counter() - t0
 
     # ----------------------------------------------------------- helpers
+    @property
+    def epoch(self) -> int:
+        """Graph epoch (one bump per update batch) — the version every
+        worker slab is stamped with and every QueryResult reports."""
+        return self.graph.epoch
+
     def subgraphs_of_pair(self, u: int, v: int) -> list:
         return self.partition.subgraphs_of_pair(u, v)
 

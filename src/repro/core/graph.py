@@ -107,6 +107,25 @@ class Graph:
     def version(self) -> int:
         return self._version
 
+    @property
+    def epoch(self) -> int:
+        """Serving-stack name for the weight version: bumped once per
+        applied update batch, stamped on worker slabs and query results
+        so a consumer always knows which graph state answered it."""
+        return self._version
+
+    def advance_epoch_to(self, epoch: int) -> None:
+        """Fast-forward the epoch counter (checkpoint restore: the
+        snapshot's weights are replayed as ONE batch, but the restored
+        graph must report the ORIGINAL epoch or restored results would
+        disagree with pre-checkpoint ones).  Never moves backwards."""
+        epoch = int(epoch)
+        if epoch < self._version:
+            raise ValueError(
+                f"cannot rewind epoch {self._version} to {epoch}"
+            )
+        self._version = epoch
+
     # --------------------------------------------------------------- algos
     def path_distance(self, vertices: Iterable[int]) -> float:
         """Distance of a path given as a vertex sequence (Definition 3)."""

@@ -14,6 +14,13 @@ Layering (host → device):
 
 ``shard_refine`` (and the dense worker path) import jax; the placement
 module is numpy-only, so control-plane users can stay device-free.
+
+This package is the runtime UNDER the public serving API: entry points
+construct a ``repro.service.KSPService`` (typed requests, epoch-stamped
+results, SLO admission) rather than calling ``Cluster.query`` or
+``QueryScheduler.submit`` directly.  Refine engines are named
+``repro.engine.registry.EngineSpec``s — no engine string-switches live
+here anymore.
 """
 
 from .placement import Placement, place, subgraph_loads  # noqa: F401

@@ -5,17 +5,23 @@ iteration's boundary pairs by owning subgraph and dispatches the groups
 to the subgraphs' primary workers — falling back to replicas on failure
 or straggling (re-issue), raising on double failure (data loss).
 
-Two refine engines:
+Refine engines are pluggable :class:`repro.engine.registry.EngineSpec`s
+(the builtin ``"pyen"`` and ``"dense_bf"`` reproduce the original two);
+``repro.service.KSPService`` is the public serving entry point over this
+module — ``Cluster.query`` is kept as the internal sequential driver.
 
-* ``"pyen"``     — host ``core.yen`` per pair through the shared
-  ``PartialKSPCache`` (the paper's QueryBolt-side reuse);
-* ``"dense_bf"`` — the grouped [S, J, z] dense Bellman–Ford batch over
-  per-worker ``pack_subgraphs`` slabs (``dist.grouped_yen``), optionally
-  routed through a ``shard_refine.make_refine_fn`` shard_map product
-  when a device mesh is supplied.
+Graph versions are first-class **epochs** here: every worker slab is
+stamped with the epoch it was packed/patched at, ``Worker.execute``
+refuses tasks when its epoch lags the graph (a replica that missed an
+update batch re-syncs via ``patch_weights`` — counted in
+``WorkerStats.resyncs`` — instead of silently serving stale weights),
+and a dead worker accumulates the batches it missed for replay on
+revival.
 
-Also here: streaming weight maintenance (per-worker slab patching + DTLP
-version bump), elastic rescale, and checkpoint/restore.
+Also here: streaming weight maintenance (per-worker slab patching +
+epoch bump), straggler auto-detection (per-worker task-latency EWMA vs
+the fleet median), elastic rescale, and checkpoint/restore that
+round-trips placement, per-worker stats and the epoch.
 """
 
 from __future__ import annotations
@@ -27,10 +33,34 @@ import numpy as np
 
 from repro.core.dtlp import DTLP
 from repro.core.kspdg import PartialKSPCache, ksp_dg, refine_groups
-from repro.core.sssp import subgraph_view
-from repro.core.yen import ksp
+from repro.engine.registry import EngineSpec, get_engine
 
-from .placement import Placement, place, subgraph_loads
+from .placement import Placement, place, subgraph_cost, subgraph_loads
+
+# EWMA smoothing for per-task worker latency (straggler detection)
+_LAT_ALPHA = 0.3
+# per-call cost floor: fixed dispatch overhead (python, jit call) must
+# not read as straggling on a worker whose batches are all tiny
+_CALL_COST_FLOOR = 1024.0
+# spike clip: one observation may move the EWMA at most this factor past
+# itself — recurring jit-compilation events (every new shape bucket) are
+# hundreds of ms and would otherwise bench healthy workers
+_LAT_CLIP = 8.0
+# scored calls before a worker's EWMA is trusted for detection: early
+# samples are compile-dominated on the dense engine (every new shape
+# bucket compiles), so judging a short history benches healthy workers
+_MIN_SCORED_CALLS = 6
+# probation: an AUTO-benched worker receives one probe group every this
+# many routes, keeping its EWMA live so a false positive (cold jit
+# buckets) self-heals and a recovered straggler rejoins the fleet —
+# manual ``mark_slow`` injection is never probed
+_PROBE_EVERY = 16
+
+
+class StaleReplicaError(RuntimeError):
+    """A worker was asked to serve at an epoch its slab cannot reach —
+    dead workers must never execute, and a stale replica must re-sync
+    before serving.  Reaching this means the routing layer is broken."""
 
 
 def merge_segments(pairs, pair_gids, results, k):
@@ -60,34 +90,56 @@ class WorkerStats:
     tasks: int = 0  # refine tasks assigned (busy-time proxy for scaleout)
     cache_hits: int = 0
     batches: int = 0  # grouped dense solves issued
+    resyncs: int = 0  # stale-epoch slab re-syncs before serving
+    lat_ewma: float = 0.0  # EWMA of cost-normalized execute latency (s/cost)
+    lat_min: float = 0.0  # fastest scored call (0 = none yet): compile-free
+    lat_samples: int = 0  # tasks folded into the EWMA
+    lat_calls: int = 0  # scored solve calls (excludes the warmup call)
 
 
 class Worker:
-    """One in-process worker: owns the slabs/caches of its subgraphs."""
+    """One in-process worker: owns the slabs/caches of its subgraphs.
 
-    def __init__(self, wid: int, dtlp: DTLP, gids, engine: str,
+    The worker carries the graph ``epoch`` its slab was last patched at;
+    ``execute`` refuses to serve while that epoch lags ``dtlp.epoch`` —
+    a live worker re-syncs (replaying the update batches it missed while
+    dead), a dead worker raises :class:`StaleReplicaError`.
+    """
+
+    def __init__(self, wid: int, dtlp: DTLP, gids, spec: EngineSpec,
                  solver=None, s_multiple: int = 1):
         self.wid = wid
         self.dtlp = dtlp
         self.gids = set(int(g) for g in gids)
-        self.engine = engine
+        self.spec = spec
+        self.engine = spec.name
         self.alive = True
         self.slow = False
+        self.auto_benched = False  # slow was set by straggler detection
+        self._probe_countdown = 0
         self.stats = WorkerStats()
         self.cache = PartialKSPCache()
         self.solver = solver
         self.s_multiple = int(s_multiple)
+        self.epoch = dtlp.epoch
+        self.pending: list[np.ndarray] = []  # eid batches missed while dead
+        # per-subgraph refine-cost proxy (THE shared formula the LPT
+        # placer balances): normalizes observed task latency so owning
+        # BIG subgraphs doesn't read as straggling
+        self._cost = {
+            gid: subgraph_cost(dtlp.partition.subgraphs[gid])
+            for gid in self.gids
+        }
         self.slab = None
         self.row_of: dict = {}
-        if engine == "dense_bf" and self.gids:
+        if spec.packs_slab and self.gids:
             # a worker that owns nothing (more workers than subgraph
             # assignments) keeps no slab; it is never routed tasks
             from repro.engine.dense import pack_subgraphs
 
-            # lane=8: the worker dispatches the jnp grouped solvers, so a
-            # tight z beats 128-lane Pallas alignment (O(z²) per problem)
             self.slab = pack_subgraphs(
-                dtlp.partition, dtlp.graph.w, gids=sorted(self.gids), lane=8
+                dtlp.partition, dtlp.graph.w, gids=sorted(self.gids),
+                lane=spec.lane, epoch=self.epoch,
             )
             self.row_of = {int(g): i for i, g in enumerate(self.slab.gids)}
 
@@ -97,65 +149,74 @@ class Worker:
 
         Returns {(gid, a, b): [(dist, global-path-tuple)], ...}.
         """
-        version = self.dtlp.graph.version
+        epoch = self.ensure_epoch()
         out: dict = {}
         misses = []
         for gid, a, b in tasks:
             self.stats.tasks += 1
-            key = (version, gid, a, b, k, self.engine)
+            key = (epoch, gid, a, b, k, self.engine)
             hit = self.cache.get(key)
             if hit is not None:
                 self.stats.cache_hits += 1
                 out[(gid, a, b)] = hit
             else:
                 misses.append((gid, a, b))
-        if not misses:
-            return out
-
-        if self.engine == "pyen":
+        if misses:
+            # straggler signal: clock the real solve only — cache-hit
+            # round-trips are ~free and would wash the EWMA with noise
+            t0 = time.perf_counter()
+            solved = self.spec.refine(self, misses, k)
+            dt = time.perf_counter() - t0
             for gid, a, b in misses:
-                sg = self.dtlp.partition.subgraphs[gid]
-                view = subgraph_view(sg, self.dtlp.graph.w)
-                local = ksp(
-                    view, sg.g2l[a], sg.g2l[b], k,
-                    mode="pyen", directed=self.dtlp.graph.directed,
-                )
-                paths = [
-                    (d, tuple(int(sg.vertices[v]) for v in p))
-                    for d, p in local
-                ]
-                key = (version, gid, a, b, k, self.engine)
-                self.cache.put(key, paths)
+                paths = solved[(gid, a, b)]
+                self.cache.put((epoch, gid, a, b, k, self.engine), paths)
                 out[(gid, a, b)] = paths
-            return out
-
-        from .grouped_yen import grouped_ksp
-
-        gk_tasks = []
-        for gid, a, b in misses:
-            sg = self.dtlp.partition.subgraphs[gid]
-            gk_tasks.append((self.row_of[gid], sg.g2l[a], sg.g2l[b]))
-        self.stats.batches += 1
-        results = grouped_ksp(
-            self.slab.adj, gk_tasks, k,
-            solver=self.solver, s_multiple=self.s_multiple,
-        )
-        for (gid, a, b), local in zip(misses, results):
-            sg = self.dtlp.partition.subgraphs[gid]
-            paths = [
-                (float(d), tuple(int(sg.vertices[v]) for v in p))
-                for d, p in local
-            ]
-            key = (version, gid, a, b, k, self.engine)
-            self.cache.put(key, paths)
-            out[(gid, a, b)] = paths
+            cost = sum(self._cost.get(gid, 1.0) for gid, _, _ in misses)
+            self._observe_latency(dt, cost, len(misses))
         return out
 
-    # -------------------------------------------------------- maintenance
+    def ensure_epoch(self) -> int:
+        """Refuse-or-resync epoch gate: the only way into ``execute``.
+
+        Returns the current graph epoch after guaranteeing this worker's
+        slab matches it.  Serving stale weights is structurally
+        impossible: the partial-KSP cache is keyed by epoch, and the slab
+        is re-patched here before any solve.
+        """
+        epoch = self.dtlp.epoch
+        if not self.alive:
+            raise StaleReplicaError(
+                f"worker {self.wid} is dead and cannot serve epoch {epoch}"
+            )
+        if self.epoch != epoch:
+            self.resync()
+        return epoch
+
+    def resync(self) -> None:
+        """Replay missed update batches into the slab, advance the epoch."""
+        self.stats.resyncs += 1
+        pending, self.pending = self.pending, []
+        if self.slab is not None and pending:
+            self._patch(np.concatenate(pending))
+        self._stamp(self.dtlp.epoch)
+
     def patch_weights(self, eids: np.ndarray) -> None:
+        """Apply one update batch in lockstep (the live-worker path)."""
+        if self.slab is not None:
+            self._patch(eids)
+        self._stamp(self.dtlp.epoch)
+
+    def defer_weights(self, eids: np.ndarray) -> None:
+        """Record a batch this (dead) worker missed, for resync on revival."""
+        self.pending.append(np.asarray(eids, dtype=np.int64).copy())
+
+    def _stamp(self, epoch: int) -> None:
+        self.epoch = int(epoch)
+        if self.slab is not None:
+            self.slab.epoch = self.epoch
+
+    def _patch(self, eids: np.ndarray) -> None:
         """Re-patch this worker's slab entries touched by updated edges."""
-        if self.slab is None:
-            return  # pyen workers read dtlp.graph.w directly
         g = self.dtlp.graph
         for e in np.asarray(eids, dtype=np.int64):
             gid = int(self.dtlp.edge_owner[e])
@@ -166,8 +227,7 @@ class Worker:
             lu = sg.g2l[int(g.edge_u[e])]
             lv = sg.g2l[int(g.edge_v[e])]
             # min over parallel edges between (lu, lv), like the packer
-            w_uv = self._min_weight(sg, lu, lv)
-            self.slab.adj[row, lu, lv] = w_uv
+            self.slab.adj[row, lu, lv] = self._min_weight(sg, lu, lv)
             if not g.directed:
                 self.slab.adj[row, lv, lu] = self._min_weight(sg, lv, lu)
 
@@ -176,37 +236,96 @@ class Worker:
         hits = np.nonzero(sg.nbr[lo:hi] == lv)[0]
         return np.float32(np.min(self.dtlp.graph.w[sg.eid[lo + hits]]))
 
+    def _observe_latency(self, dt: float, cost: float, n_tasks: int) -> None:
+        """Fold one execute's solve latency into the straggler EWMA.
+
+        The signal is seconds per unit of placement-cost, NOT per task:
+        a worker that owns the biggest subgraphs legitimately spends
+        more wall time per task, and must not read as a straggler.  The
+        cost is floored (fixed dispatch overhead on tiny batches) and
+        each worker's FIRST observation is discarded as warmup — for the
+        dense engine that call typically pays one-off jit compilation.
+        """
+        if n_tasks <= 0 or cost <= 0:
+            return
+        st = self.stats
+        if st.lat_samples == 0:
+            st.lat_samples += n_tasks  # warmup call: count it, don't score
+            return
+        per_cost = dt / max(cost, _CALL_COST_FLOOR)
+        # the latency noise is one-sided (jit compilation only ever ADDS
+        # time), so the fastest scored call approximates the worker's
+        # true compile-free service rate — detection cross-checks it
+        st.lat_min = (per_cost if st.lat_min == 0.0
+                      else min(st.lat_min, per_cost))
+        if st.lat_ewma == 0.0:
+            st.lat_ewma = per_cost
+        else:
+            # spike clip: a compile event must not swamp the signal; a
+            # genuinely slow worker still converges geometrically
+            per_cost = min(per_cost, _LAT_CLIP * st.lat_ewma)
+            st.lat_ewma = _LAT_ALPHA * per_cost + (1 - _LAT_ALPHA) * st.lat_ewma
+        st.lat_samples += n_tasks
+        st.lat_calls += 1
+
 
 class Cluster:
-    """In-process worker cluster with owner-aligned placement."""
+    """In-process worker cluster with owner-aligned placement.
 
-    def __init__(self, dtlp: DTLP, n_workers: int, engine: str = "pyen",
-                 *, mesh=None, mesh_axis=("data", "model")):
-        if engine not in ("pyen", "dense_bf"):
-            raise ValueError(f"unknown engine {engine!r}")
+    ``straggler_factor`` enables automatic straggler detection: a worker
+    whose per-task latency EWMA exceeds ``factor ×`` the fleet median
+    (with at least ``straggler_min_tasks`` observed tasks) is marked
+    ``slow`` by ``route`` and its groups re-issue to the replica —
+    ``mark_slow`` stays available as manual fault injection, and
+    ``mark_slow(wid, False)`` clears an auto-detection too.  ``None``
+    disables (the default for direct construction; ``repro.service``
+    turns it on).
+    """
+
+    def __init__(self, dtlp: DTLP, n_workers: int, engine="pyen",
+                 *, mesh=None, mesh_axis=("data", "model"),
+                 straggler_factor: float | None = None,
+                 straggler_min_tasks: int = 8,
+                 placement: Placement | None = None):
         self.dtlp = dtlp
-        self.engine = engine
+        self.spec = get_engine(engine)
+        self.engine = self.spec.name
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        self.straggler_factor = (
+            None if straggler_factor is None else float(straggler_factor)
+        )
+        self.straggler_min_tasks = int(straggler_min_tasks)
         self.reissues = 0
-        self._build_workers(int(n_workers))
+        self.auto_slowed = 0  # workers benched by straggler auto-detection
+        self.auto_recovered = 0  # benched workers that rejoined via probation
+        self._straggler_cache = None  # (state sig, fleet medians)
+        self._build_workers(int(n_workers), placement=placement)
 
     # -------------------------------------------------------------- build
-    def _build_workers(self, n_workers: int) -> None:
-        loads = subgraph_loads(self.dtlp)
-        self.placement: Placement = place(loads, n_workers)
+    def _build_workers(self, n_workers: int,
+                       placement: Placement | None = None) -> None:
+        if placement is None:
+            placement = place(subgraph_loads(self.dtlp), n_workers)
+        elif placement.n_workers != n_workers:
+            raise ValueError(
+                f"placement is for {placement.n_workers} workers, "
+                f"cluster has {n_workers}"
+            )
+        self.placement: Placement = placement
         solver = None
         s_multiple = 1
-        if self.mesh is not None and self.engine == "dense_bf":
-            from .shard_refine import make_refine_fn
-
-            solver = make_refine_fn(self.mesh, axis=self.mesh_axis)
-            names = ([self.mesh_axis] if isinstance(self.mesh_axis, str)
-                     else list(self.mesh_axis))
-            s_multiple = int(np.prod([self.mesh.shape[a] for a in names]))
+        if self.mesh is not None:
+            if not self.spec.supports_mesh:
+                raise ValueError(
+                    f"engine {self.engine!r} has no device-mesh path"
+                )
+            solver, s_multiple = self.spec.make_mesh_solver(
+                self.mesh, self.mesh_axis
+            )
         self.workers = [
             Worker(
-                w, self.dtlp, self.placement.owned_by(w), self.engine,
+                w, self.dtlp, self.placement.owned_by(w), self.spec,
                 solver=solver, s_multiple=s_multiple,
             )
             for w in range(n_workers)
@@ -216,10 +335,19 @@ class Cluster:
     def n_workers(self) -> int:
         return len(self.workers)
 
+    @property
+    def epoch(self) -> int:
+        """Current graph epoch — stamped on every result served now."""
+        return self.dtlp.epoch
+
     # -------------------------------------------------------------- query
     def query(self, s: int, t: int, k: int, *, max_iterations: int = 10_000,
               return_stats: bool = False):
         """Exact KSP through the cluster: [(dist, path)], ascending.
+
+        Internal sequential driver — the public serving surface is
+        ``repro.service.KSPService``, which adds typed requests, epoch
+        stamping, SLO admission and cross-query batching on top.
 
         ``max_iterations`` bounds one query's KSP-DG iterations (a tail
         latency guard); when it fires the result is best-effort and the
@@ -251,8 +379,22 @@ class Cluster:
         p = int(self.placement.primary[gid])
         r = int(self.placement.replica[gid])
         pw = self.workers[p]
+        self._check_straggler(pw)
         if pw.alive and not pw.slow:
             return pw, False
+        if pw.alive and pw.auto_benched:
+            # probation: every _PROBE_EVERY routes the benched primary
+            # serves one group anyway — its EWMA stays live, and once it
+            # reads fleet-normal again it rejoins (false positives from
+            # cold jit buckets self-heal; recovered stragglers return)
+            pw._probe_countdown -= 1
+            if pw._probe_countdown <= 0:
+                pw._probe_countdown = _PROBE_EVERY
+                if self._recovered(pw):
+                    pw.slow = False
+                    pw.auto_benched = False
+                    self.auto_recovered += 1
+                return pw, False  # the probe itself
         if r != p and self.workers[r].alive:
             return self.workers[r], True  # replica takeover / re-issue
         if pw.alive:
@@ -261,6 +403,72 @@ class Cluster:
             f"subgraph {gid} unavailable: primary worker {p} and replica "
             f"worker {r} are both dead — data loss, queries cannot be exact"
         )
+
+    def _check_straggler(self, w: Worker) -> None:
+        """Auto-set ``slow`` when a worker's task-latency EWMA runs past
+        ``straggler_factor ×`` the fleet median (ROADMAP: automatic
+        re-issue instead of manual ``mark_slow`` fault injection)."""
+        factor = self.straggler_factor
+        if (factor is None or w.slow or not w.alive
+                or w.stats.lat_samples < self.straggler_min_tasks
+                or w.stats.lat_calls < _MIN_SCORED_CALLS):
+            return
+        med_ewma, med_min = self._fleet_medians()
+        # both signals must agree: the EWMA says "currently slow", the
+        # per-worker minimum says "not just a compile/GC transient" —
+        # a healthy worker's fastest call is always fleet-normal
+        if (med_ewma > 0.0 and w.stats.lat_ewma > factor * med_ewma
+                and med_min > 0.0 and w.stats.lat_min > factor * med_min):
+            w.slow = True
+            w.auto_benched = True
+            w._probe_countdown = _PROBE_EVERY
+            self.auto_slowed += 1
+
+    def _fleet_medians(self) -> tuple[float, float]:
+        """(median EWMA, median lat_min) over qualified live workers.
+
+        Cached per observation state: ``route`` runs once per subgraph
+        group per tick, but the medians only move when some worker
+        scores a new solve call — keyed on the fleet's total scored-call
+        count (plus liveness), so the numpy work runs once per change
+        instead of once per route."""
+        sig = (
+            sum(x.stats.lat_calls for x in self.workers),
+            sum(1 for x in self.workers if x.alive),
+        )
+        if self._straggler_cache is not None and \
+                self._straggler_cache[0] == sig:
+            return self._straggler_cache[1]
+        peers = [
+            x.stats for x in self.workers
+            if x.alive and x.stats.lat_samples >= self.straggler_min_tasks
+            and x.stats.lat_calls >= _MIN_SCORED_CALLS
+        ]
+        if len(peers) < 2:
+            meds = (0.0, 0.0)  # no fleet to compare against
+        else:
+            meds = (
+                float(np.median([p.lat_ewma for p in peers])),
+                float(np.median([p.lat_min for p in peers])),
+            )
+        self._straggler_cache = (sig, meds)
+        return meds
+
+    def _recovered(self, w: Worker) -> bool:
+        """Probation verdict: EWMA back under half the bench threshold
+        (hysteresis against flapping).  ``lat_min`` is forgiven — it is
+        a run-lifetime minimum and would otherwise bench forever."""
+        factor = self.straggler_factor
+        if factor is None:
+            return True
+        peers = [
+            x.stats.lat_ewma for x in self.workers
+            if x.alive and not x.slow and x.stats.lat_calls > 0
+        ]
+        if not peers:
+            return False
+        med = float(np.median(peers))
+        return med > 0.0 and w.stats.lat_ewma <= 0.5 * factor * med
 
     # -------------------------------------------------------------- faults
     def _worker(self, wid: int) -> Worker:
@@ -274,17 +482,34 @@ class Cluster:
     def kill(self, wid: int) -> None:
         self._worker(wid).alive = False
 
+    def revive(self, wid: int) -> None:
+        """Bring a dead worker back.  Its slab stays at the epoch it died
+        at; the first ``execute`` re-syncs (replaying missed batches) —
+        lazily, so revival is O(1) and the resync shows up in stats."""
+        self._worker(wid).alive = True
+
     def mark_slow(self, wid: int, flag: bool = True) -> None:
-        self._worker(wid).slow = bool(flag)
+        """Manual straggler injection; ``flag=False`` also clears an
+        auto-detection (operator override ends probation)."""
+        w = self._worker(wid)
+        w.slow = bool(flag)
+        if not flag:
+            w.auto_benched = False
 
     # --------------------------------------------------------- maintenance
     def apply_updates(self, eids, new_w) -> float:
-        """Apply a weight-update batch everywhere; returns seconds."""
+        """Apply a weight-update batch: bump the epoch, patch every LIVE
+        worker in lockstep, and defer the batch on dead workers so their
+        replicas re-sync on revival instead of serving stale weights.
+        Returns seconds."""
         t0 = time.perf_counter()
         eids = np.asarray(eids, dtype=np.int64)
         self.dtlp.apply_updates(eids, np.asarray(new_w, dtype=np.float64))
         for worker in self.workers:
-            worker.patch_weights(eids)
+            if worker.alive:
+                worker.patch_weights(eids)
+            else:
+                worker.defer_weights(eids)
         return time.perf_counter() - t0
 
     def rebaseline(self) -> float:
@@ -293,7 +518,7 @@ class Cluster:
         Skeleton lower bounds decay as weights drift from the vfrag
         baseline (the paper's τ-degradation) and KSP-DG iteration counts
         — hence tail latency — blow up with them.  Weights themselves
-        don't change, so worker slabs and version-keyed caches stay
+        don't change, so worker slabs and epoch-keyed caches stay
         valid; only the control-plane index is rebuilt.  Returns seconds.
         """
         return self.dtlp.rebaseline()
@@ -307,40 +532,110 @@ class Cluster:
 
     # --------------------------------------------------- checkpoint/restore
     def checkpoint(self) -> dict:
-        """A restart-sufficient snapshot: weights + cluster shape."""
+        """A restart-sufficient snapshot: weights + cluster shape + state.
+
+        Format 2 round-trips what format 1 silently dropped: the
+        ``Placement`` (primary/replica/load) so a restored cluster does
+        not re-place from scratch, per-worker stats (including the
+        straggler EWMA — a restored cluster remembers who was slow),
+        worker liveness/slow flags, and the graph epoch.
+        """
         g = self.dtlp.graph
         return {
-            "format": 1,
+            "format": 2,
             "n_workers": self.n_workers,
             "engine": self.engine,
-            "version": g.version,
+            "epoch": self.epoch,
+            "version": g.version,  # format-1 compat alias
+            "z": self.dtlp.z,  # index shape: restore rebuilds with these
+            "xi": self.dtlp.xi,
             "w": np.asarray(g.w, dtype=np.float64).copy(),
+            "placement": {
+                "primary": self.placement.primary.copy(),
+                "replica": self.placement.replica.copy(),
+                "load": self.placement.load.copy(),
+            },
+            "workers": [
+                {
+                    "stats": dataclasses.asdict(w.stats),
+                    "alive": w.alive,
+                    "slow": w.slow,
+                    "auto_benched": w.auto_benched,
+                }
+                for w in self.workers
+            ],
         }
 
     @classmethod
-    def restore(cls, snap: dict, graph_factory, z: int, xi: int,
-                engine: str | None = None, n_workers: int | None = None,
+    def restore(cls, snap: dict, graph_factory, z: int | None = None,
+                xi: int | None = None,
+                engine=None, n_workers: int | None = None,
                 mesh=None, mesh_axis=("data", "model"),
+                straggler_factor: float | None = None,
+                straggler_min_tasks: int = 8,
                 **build_kw) -> "Cluster":
         """Rebuild a cluster from ``checkpoint()`` output.
 
         ``graph_factory`` recreates the static topology (initial
         weights); the snapshot's weights are then replayed as one update
-        batch, so the restored cluster answers exactly like the original.
-        A device mesh is runtime configuration, not state — re-supply it
-        via ``mesh``/``mesh_axis`` to restore a shard_map refine path.
+        batch and the epoch fast-forwarded to the snapshot's, so the
+        restored cluster answers exactly like — and reports the same
+        epoch as — the original.  ``z``/``xi`` default to the snapshot's
+        recorded index shape (format ≥ 2); pass them explicitly only to
+        restore into a DIFFERENT index shape.  Placement and per-worker
+        stats are restored when the worker count AND index shape match
+        the snapshot (otherwise the cluster re-places and starts fresh
+        stats).  A device mesh is runtime configuration, not state —
+        re-supply it via ``mesh``/``mesh_axis`` to restore a shard_map
+        refine path.
         """
+        z = int(snap["z"]) if z is None else int(z)
+        xi = int(snap["xi"]) if xi is None else int(xi)
         g = graph_factory()
         d = DTLP.build(g, z=z, xi=xi, **build_kw)
+        n_workers = (int(snap["n_workers"]) if n_workers is None
+                     else int(n_workers))
+        same_shape = (
+            n_workers == int(snap["n_workers"])
+            and z == snap.get("z", z) and xi == snap.get("xi", xi)
+        )
+        placement = None
+        if same_shape and "placement" in snap:
+            pl = snap["placement"]
+            primary = np.asarray(pl["primary"], dtype=np.int64).copy()
+            if primary.shape[0] != d.partition.n_subgraphs:
+                raise ValueError(
+                    f"snapshot placement covers {primary.shape[0]} "
+                    f"subgraphs but the rebuilt index has "
+                    f"{d.partition.n_subgraphs} — graph_factory does not "
+                    "reproduce the checkpointed topology"
+                )
+            placement = Placement(
+                primary=primary,
+                replica=np.asarray(pl["replica"], dtype=np.int64).copy(),
+                load=np.asarray(pl["load"], dtype=np.float64).copy(),
+                n_workers=n_workers,
+            )
         cl = cls(
-            d,
-            n_workers if n_workers is not None else int(snap["n_workers"]),
+            d, n_workers,
             engine=engine if engine is not None else str(snap["engine"]),
-            mesh=mesh,
-            mesh_axis=mesh_axis,
+            mesh=mesh, mesh_axis=mesh_axis,
+            straggler_factor=straggler_factor,
+            straggler_min_tasks=straggler_min_tasks,
+            placement=placement,
         )
         w = np.asarray(snap["w"], dtype=np.float64)
         changed = np.nonzero(w != g.w)[0]
         if changed.shape[0]:
             cl.apply_updates(changed, w[changed])
+        epoch = int(snap.get("epoch", snap.get("version", g.version)))
+        g.advance_epoch_to(epoch)
+        for wk in cl.workers:
+            wk._stamp(epoch)
+        if same_shape and "workers" in snap:
+            for wk, ws in zip(cl.workers, snap["workers"]):
+                wk.stats = WorkerStats(**ws["stats"])
+                wk.alive = bool(ws["alive"])
+                wk.slow = bool(ws["slow"])
+                wk.auto_benched = bool(ws.get("auto_benched", False))
         return cl

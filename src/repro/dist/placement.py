@@ -27,22 +27,25 @@ class Placement:
         return np.nonzero((self.primary == wid) | (self.replica == wid))[0]
 
 
-def subgraph_loads(dtlp) -> np.ndarray:
-    """Per-subgraph refine-cost proxy.
+def subgraph_cost(sg) -> float:
+    """One subgraph's refine-cost proxy: nv² · avg-degree.
 
     One grouped dense BF relaxation over a subgraph costs ~nv² work per
     problem and the number of spur problems scales with path length
-    (~average degree of the slab), so nv² · avg-degree is the proxy the
-    LPT packer balances.
+    (~average degree of the slab).  THE shared cost model: the LPT
+    packer balances it and the straggler detector normalizes observed
+    worker latency by it — keep them the same formula or placement
+    balance and straggler detection silently de-sync.
     """
-    loads = np.array(
-        [
-            sg.nv ** 2 * (2.0 * sg.ne / max(1, sg.nv))
-            for sg in dtlp.partition.subgraphs
-        ],
+    return max(1.0, sg.nv ** 2 * (2.0 * sg.ne / max(1, sg.nv)))
+
+
+def subgraph_loads(dtlp) -> np.ndarray:
+    """Per-subgraph refine-cost proxy vector (see :func:`subgraph_cost`)."""
+    return np.array(
+        [subgraph_cost(sg) for sg in dtlp.partition.subgraphs],
         dtype=np.float64,
     )
-    return np.maximum(loads, 1.0)
 
 
 def place(loads: np.ndarray, n_workers: int) -> Placement:

@@ -24,6 +24,10 @@ ticks:
 Admission control sits on top: a bounded FIFO queue (``max_queue``), a
 cap on in-flight queries per tick (``max_in_flight``) and, in ``run``, a
 batch window that groups simulated arrivals before a tick starts.
+``repro.service.KSPService`` is the public serving surface over this
+scheduler — it adds typed requests, epoch stamping/barriers (via
+``freeze_admission``) and deadline-based SLO admission (via
+``predicted_wait``); ``submit``/``run`` here are internals.
 Answers are identical — distances, paths and tie order — to sequential
 ``Cluster.query``: the stepper is the same code and ``merge_segments``
 builds the same segment lists, so batching changes the schedule, never
@@ -73,6 +77,7 @@ class QueryTicket:
     admitted_at: float | None = None
     finished_at: float | None = None
     ticks: int = 0  # lockstep rounds this query participated in
+    epoch: int | None = None  # graph epoch the query was admitted under
     result: list | None = None
     stats: object = None  # core QueryStats, set on completion
     _stepper: object = dataclasses.field(default=None, repr=False)
@@ -92,6 +97,45 @@ class QueryTicket:
 
 class QueueFull(RuntimeError):
     """Raised by ``submit`` when the bounded admission queue is full."""
+
+
+def drive_trace(sched, arrivals, submit_at, tick, *,
+                extra_pending=lambda: False, window: float = 0.0) -> None:
+    """The arrival-driven replay loop, shared by ``QueryScheduler.run``
+    and ``repro.service.KSPService.replay`` so the tricky simulated-clock
+    semantics exist exactly once.
+
+    ``submit_at(i, arrival)`` admits request ``i`` (and owns rejection
+    handling); ``tick()`` advances the system one round;
+    ``extra_pending()`` reports caller-side work the loop must drain
+    (held queries, queued update batches).  The clock advances by each
+    tick's measured wall time; when the system is idle it jumps to the
+    next arrival, and when it is under-occupied and the next arrival is
+    within ``window`` seconds it waits (advances the clock) to group
+    arrivals into the same admission burst.
+    """
+    i = 0
+    n = len(arrivals)
+
+    def submit_due(horizon):
+        nonlocal i
+        while i < n and arrivals[i] <= horizon:
+            sched.clock = max(sched.clock, arrivals[i])
+            submit_at(i, arrivals[i])
+            i += 1
+
+    while i < n or sched.queue or sched.active or extra_pending():
+        submit_due(sched.clock)
+        if not sched.queue and not sched.active and not extra_pending():
+            if i >= n:
+                break  # tail requests rejected at admission: all done
+            sched.clock = max(sched.clock, arrivals[i])  # idle: jump
+            continue
+        if (window > 0.0 and i < n
+                and len(sched.active) + len(sched.queue) < sched.max_in_flight
+                and arrivals[i] <= sched.clock + window):
+            submit_due(sched.clock + window)
+        tick()
 
 
 class QueryScheduler:
@@ -115,6 +159,21 @@ class QueryScheduler:
         self.stats = BatchStats()
         self._qid = itertools.count()
         self.clock = 0.0
+        # EWMA of working-tick wall latency (seconds): the predicted-
+        # queue-delay signal SLO admission multiplies by queue depth
+        self.tick_latency_ewma = 0.0
+        self._tick_samples = 0
+        # epoch barrier hook (repro.service): while True, ticks keep
+        # advancing in-flight queries but admit nothing, so a pending
+        # UpdateBatch can be ordered after every query it must not affect
+        self.freeze_admission = False
+
+    def predicted_wait(self) -> float:
+        """Predicted queueing delay (seconds) of the next submission:
+        EWMA of recent tick latency × current queue depth.  Zero until
+        the first working tick has been observed — admission must not
+        reject on a cold scheduler."""
+        return self.tick_latency_ewma * len(self.queue)
 
     # ----------------------------------------------------------- admission
     def submit(self, s: int, t: int, k: int, *,
@@ -147,9 +206,12 @@ class QueryScheduler:
         return ticket
 
     def _admit(self) -> None:
+        if self.freeze_admission:
+            return
         while self.queue and len(self.active) < self.max_in_flight:
             tk = self.queue.popleft()
             tk.admitted_at = self.clock
+            tk.epoch = self.cluster.epoch  # the epoch that will answer it
             tk._stepper = ksp_dg_stepper(
                 self.cluster.dtlp, tk.s, tk.t, tk.k,
                 max_iterations=self.max_iterations,
@@ -230,7 +292,15 @@ class QueryScheduler:
             if not tk.done:
                 still_active.append(tk)
         self.active = still_active
-        self.clock += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        # EWMA over WORKING ticks only — idle ticks are ~free and would
+        # wash the queue-delay predictor toward zero
+        if self._tick_samples == 0:
+            self.tick_latency_ewma = dt
+        else:
+            self.tick_latency_ewma = 0.3 * dt + 0.7 * self.tick_latency_ewma
+        self._tick_samples += 1
         completed = self.finished[n_fin:]
         for tk in completed:
             tk.finished_at = self.clock
@@ -266,32 +336,17 @@ class QueryScheduler:
             if len(arrivals) != len(queries):
                 raise ValueError("arrival_times length != queries length")
         tickets: list[QueryTicket] = []
-        i = 0
 
-        def submit_due(horizon):
-            nonlocal i
-            while i < len(queries) and arrivals[i] <= horizon:
-                self.clock = max(self.clock, arrivals[i])
-                s, t = queries[i]
-                try:
-                    # arrival back-dated to trace time: a query that
-                    # landed mid-tick accrues the queueing delay it
-                    # actually experienced
-                    tickets.append(self.submit(s, t, k, arrival=arrivals[i]))
-                except QueueFull:
-                    if not reject_overflow:
-                        raise
-                i += 1
+        def submit_at(i, arrival):
+            s, t = queries[i]
+            try:
+                # arrival back-dated to trace time: a query that landed
+                # mid-tick accrues the queueing delay it actually saw
+                tickets.append(self.submit(s, t, k, arrival=arrival))
+            except QueueFull:
+                if not reject_overflow:
+                    raise
 
-        while i < len(queries) or self.queue or self.active:
-            submit_due(self.clock)
-            if not self.queue and not self.active:
-                # idle: jump to the next arrival
-                self.clock = max(self.clock, arrivals[i])
-                continue
-            if (batch_window > 0.0 and i < len(queries)
-                    and len(self.active) + len(self.queue) < self.max_in_flight
-                    and arrivals[i] <= self.clock + batch_window):
-                submit_due(self.clock + batch_window)
-            self.tick()
+        drive_trace(self, arrivals, submit_at, self.tick,
+                    window=batch_window)
         return tickets

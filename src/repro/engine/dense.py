@@ -37,6 +37,7 @@ class SubgraphSlab:
     nv: np.ndarray         # int32[S] true vertex counts
     gids: np.ndarray       # int64[S] original subgraph ids
     z: int
+    epoch: int = 0         # graph epoch the adj entries were packed/patched at
 
     @property
     def n_sub(self) -> int:
@@ -45,7 +46,7 @@ class SubgraphSlab:
 
 def pack_subgraphs(
     partition, weights, z_pad: int | None = None, gids=None,
-    lane: int = 128,
+    lane: int = 128, epoch: int = 0,
 ) -> SubgraphSlab:
     """Dense-pack subgraphs of a core Partition under `weights`.
 
@@ -77,7 +78,8 @@ def pack_subgraphs(
         adj[i, np.arange(sg.nv), np.arange(sg.nv)] = 0.0
         nv[i] = sg.nv
     return SubgraphSlab(
-        adj=adj, nv=nv, gids=np.array([sg.gid for sg in subs]), z=z
+        adj=adj, nv=nv, gids=np.array([sg.gid for sg in subs]), z=z,
+        epoch=int(epoch),
     )
 
 

@@ -1,0 +1,161 @@
+"""EngineSpec registry: the pluggable refine-engine surface.
+
+The serving stack used to thread ``"pyen"``/``"dense_bf"`` string
+switches through ``dist.cluster``, ``dist.scheduler`` and
+``launch.serve``; every new engine meant touching all three.  An
+:class:`EngineSpec` instead packages everything a ``dist.cluster.Worker``
+needs to run one engine — whether it packs a dense slab, which lane
+alignment that slab uses, how to solve a batch of cache-miss refine
+tasks, and how to build a device-mesh solver — and the registry maps
+names to specs.  ``repro.service`` re-exports this module as the public
+way to plug in an engine; the builtin specs reproduce the two original
+engines exactly.
+
+A spec's ``refine(worker, misses, k)`` receives the worker (slab,
+row_of, dtlp access) and the cache-miss task list ``[(gid, a, b)]`` with
+global vertex ids, and returns ``{(gid, a, b): [(dist, global-path)]}``
+for exactly those tasks — epoch checks and cache fills stay in
+``Worker.execute``, so an engine can never serve stale weights by
+accident.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+__all__ = [
+    "EngineSpec",
+    "register_engine",
+    "get_engine",
+    "available_engines",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Everything the worker runtime needs to run one refine engine.
+
+    ``refine(worker, misses, k) -> {(gid, a, b): [(d, path)]}`` solves a
+    batch of partial-KSP tasks; ``packs_slab`` makes each worker pack its
+    owned subgraphs into a dense ``[S, z, z]`` slab at init (``lane``
+    alignment); ``make_mesh_solver(mesh, mesh_axis) -> (solver,
+    s_multiple)`` is optional device-mesh wiring (None = the engine has
+    no mesh path).
+    """
+
+    name: str
+    refine: Callable
+    packs_slab: bool = False
+    lane: int = 8
+    make_mesh_solver: Callable | None = None
+    description: str = ""
+
+    @property
+    def supports_mesh(self) -> bool:
+        return self.make_mesh_solver is not None
+
+
+_REGISTRY: dict[str, EngineSpec] = {}
+
+
+def register_engine(spec: EngineSpec, *, overwrite: bool = False) -> EngineSpec:
+    """Register ``spec`` under ``spec.name``; returns it for chaining."""
+    if not overwrite and spec.name in _REGISTRY:
+        raise ValueError(f"engine {spec.name!r} is already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_engine(name) -> EngineSpec:
+    """Resolve an engine name (or pass an :class:`EngineSpec` through)."""
+    if isinstance(name, EngineSpec):
+        return name
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown engine {name!r}; available: {available_engines()}"
+        )
+    return spec
+
+
+def available_engines() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# builtin engines — behavior-identical to the former string switches
+# ---------------------------------------------------------------------------
+def _pyen_refine(worker, misses, k):
+    """Host Yen per pair on the live subgraph view (QueryBolt-side)."""
+    from repro.core.sssp import subgraph_view
+    from repro.core.yen import ksp
+
+    dtlp = worker.dtlp
+    out = {}
+    for gid, a, b in misses:
+        sg = dtlp.partition.subgraphs[gid]
+        view = subgraph_view(sg, dtlp.graph.w)
+        local = ksp(
+            view, sg.g2l[a], sg.g2l[b], k,
+            mode="pyen", directed=dtlp.graph.directed,
+        )
+        out[(gid, a, b)] = [
+            (d, tuple(int(sg.vertices[v]) for v in p)) for d, p in local
+        ]
+    return out
+
+
+def _dense_bf_refine(worker, misses, k):
+    """All misses through ONE grouped [S, J, z] lockstep-Yen slab solve."""
+    from repro.dist.grouped_yen import grouped_ksp
+
+    dtlp = worker.dtlp
+    gk_tasks = []
+    for gid, a, b in misses:
+        sg = dtlp.partition.subgraphs[gid]
+        gk_tasks.append((worker.row_of[gid], sg.g2l[a], sg.g2l[b]))
+    worker.stats.batches += 1
+    results = grouped_ksp(
+        worker.slab.adj, gk_tasks, k,
+        solver=worker.solver, s_multiple=worker.s_multiple,
+    )
+    out = {}
+    for (gid, a, b), local in zip(misses, results):
+        sg = dtlp.partition.subgraphs[gid]
+        out[(gid, a, b)] = [
+            (float(d), tuple(int(sg.vertices[v]) for v in p))
+            for d, p in local
+        ]
+    return out
+
+
+def _dense_bf_mesh_solver(mesh, mesh_axis):
+    """shard_map grouped-BF product over a device mesh."""
+    import numpy as np
+
+    from repro.dist.shard_refine import make_refine_fn
+
+    solver = make_refine_fn(mesh, axis=mesh_axis)
+    names = ([mesh_axis] if isinstance(mesh_axis, str) else list(mesh_axis))
+    s_multiple = int(np.prod([mesh.shape[a] for a in names]))
+    return solver, s_multiple
+
+
+register_engine(EngineSpec(
+    name="pyen",
+    refine=_pyen_refine,
+    packs_slab=False,
+    description="host core.yen per pair through the shared PartialKSPCache",
+))
+
+# lane=8: the worker dispatches the jnp grouped solvers, so a tight z
+# beats 128-lane Pallas alignment (relaxation compute is O(z²)/problem)
+register_engine(EngineSpec(
+    name="dense_bf",
+    refine=_dense_bf_refine,
+    packs_slab=True,
+    lane=8,
+    make_mesh_solver=_dense_bf_mesh_solver,
+    description="grouped [S, J, z] dense Bellman–Ford over per-worker slabs",
+))

@@ -2,11 +2,11 @@
 a dynamic road network, streaming weight updates, concurrent KSP queries
 batched across a worker cluster, with failure/straggler injection.
 
-Queries arrive as a Poisson process (simulated clock) and are served by
-the cross-query lockstep scheduler: up to ``--concurrency`` queries are
-in flight per tick, arrivals within ``--batch-window`` ms are grouped
-into the same admission burst, and each tick's refine tasks are de-duped
-across queries into shared per-worker grouped solves.
+Everything goes through the typed ``repro.service.KSPService`` facade:
+argv builds ONE ``ServiceConfig``, queries are ``QueryRequest``s (with
+an optional ``--deadline-ms`` SLO that rejects by predicted queue
+delay), update batches are ``UpdateBatch``es applied behind the epoch
+barrier, and every answer reports the graph epoch that served it.
 
     PYTHONPATH=src python -m repro.launch.serve --rows 16 --cols 16 \
         --workers 8 --queries 50 --epochs 3 --concurrency 8 --kill 3
@@ -19,10 +19,14 @@ import time
 
 import numpy as np
 
-from repro.core.dtlp import DTLP
 from repro.data.roadnet import WeightUpdateStream, grid_road_network
-from repro.dist.cluster import Cluster
-from repro.dist.scheduler import QueryScheduler
+from repro.service import (
+    KSPService,
+    QueryRequest,
+    ServiceConfig,
+    UpdateBatch,
+    available_engines,
+)
 
 
 def main():
@@ -38,7 +42,10 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--tau", type=float, default=0.5)
     ap.add_argument("--kill", type=int, default=None, help="kill this worker after epoch 1")
-    ap.add_argument("--engine", choices=["dense_bf", "pyen"], default="pyen")
+    ap.add_argument("--revive", action="store_true",
+                    help="revive the killed worker one epoch later "
+                    "(its replica re-syncs the missed batch before serving)")
+    ap.add_argument("--engine", choices=available_engines(), default="pyen")
     ap.add_argument(
         "--mesh", action="store_true",
         help="route the dense refine through jax.shard_map over the device "
@@ -63,6 +70,16 @@ def main():
         "(overflowing queries are rejected and counted)",
     )
     ap.add_argument(
+        "--deadline-ms", type=float, default=0.0,
+        help="per-query latency SLO: reject when the predicted queue "
+        "delay (tick-latency EWMA × queue depth) exceeds this; 0 disables",
+    )
+    ap.add_argument(
+        "--straggler-factor", type=float, default=8.0,
+        help="auto-bench a worker whose task-latency EWMA exceeds this "
+        "multiple of the fleet median; 0 disables",
+    )
+    ap.add_argument(
         "--rebaseline-drift", type=float, default=0.05,
         help="re-anchor DTLP bounds when mean weight drift exceeds this "
         "(loose bounds blow up KSP-DG iteration counts); 0 disables",
@@ -79,87 +96,102 @@ def main():
         mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
         print(f"shard_map refine over a {jax.device_count()}x1 device mesh")
 
+    cfg = ServiceConfig(
+        engine=engine,
+        n_workers=args.workers,
+        max_in_flight=args.concurrency,
+        max_queue=args.max_queue if args.max_queue > 0 else None,
+        batch_window_ms=args.batch_window,
+        z=args.z,
+        xi=args.xi,
+        mesh=mesh,
+        straggler_factor=(args.straggler_factor
+                          if args.straggler_factor > 0 else None),
+        rebaseline_drift=args.rebaseline_drift,
+    )
     g = grid_road_network(args.rows, args.cols, seed=args.seed)
     print(f"road network: {g.n} vertices, {g.m} edges")
     t0 = time.time()
-    d = DTLP.build(g, z=args.z, xi=args.xi)
+    svc = KSPService.build(g, cfg)
+    d = svc.dtlp
     print(
         f"DTLP built in {time.time() - t0:.2f}s: "
         f"{d.partition.n_subgraphs} subgraphs, |G_λ|={d.skeleton.n}, "
         f"{d.stats.n_paths} bounding paths "
         f"(EBP-II {d.stats.ebp_slots} → G-MPTree {d.stats.mptree_slots} slots)"
     )
-    cluster = Cluster(d, n_workers=args.workers, engine=engine, mesh=mesh)
-    scheduler = QueryScheduler(
-        cluster,
-        max_in_flight=args.concurrency,
-        max_queue=args.max_queue if args.max_queue > 0 else None,
-    )
     stream = WeightUpdateStream(g, alpha=args.alpha, tau=args.tau, seed=1)
     rng = np.random.default_rng(2)
+    deadline = args.deadline_ms if args.deadline_ms > 0 else None
 
     total_empty = 0
-    for epoch in range(args.epochs):
-        if args.kill is not None and epoch == 1:
-            cluster.kill(args.kill)
+    for epoch_i in range(args.epochs):
+        if args.kill is not None and epoch_i == 1:
+            svc.kill(args.kill)
             print(f"-- killed worker {args.kill}; replicas take over --")
-        qs = [
-            tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+        if args.kill is not None and args.revive and epoch_i == 2:
+            svc.revive(args.kill)
+            print(f"-- revived worker {args.kill}; it re-syncs missed "
+                  f"update batches before serving --")
+        reqs = [
+            QueryRequest(*map(int, rng.choice(g.n, size=2, replace=False)),
+                         k=args.k, deadline_ms=deadline)
             for _ in range(args.queries)
         ]
         gaps = rng.exponential(1.0 / args.arrival_rate, size=args.queries)
-        arrivals = scheduler.clock + np.cumsum(gaps)
+        arrivals = svc.scheduler.clock + np.cumsum(gaps)
         # per-epoch reporting: delta the counters, reset the gauges
-        st = scheduler.stats
-        before = (st.ticks, st.tasks_requested, st.tasks_dispatched,
-                  st.rejected)
+        st = svc.scheduler.stats
+        before = (st.ticks, st.tasks_requested, st.tasks_dispatched)
+        rej_before = svc.stats.rejected
+        slo_before = svc.stats.rejected_deadline
         st.max_queue_depth = 0
         st.max_in_flight = 0
-        tickets = scheduler.run(
-            qs, args.k,
-            arrival_times=arrivals,
-            batch_window=args.batch_window / 1e3,
-            reject_overflow=True,
-        )
-        lat = np.array([tk.latency for tk in tickets if tk.done]) * 1e3
-        truncated = sum(tk.stats.truncated for tk in tickets if tk.done)
+        tickets = svc.replay(reqs, arrival_times=arrivals)
+        served = [tk.result for tk in tickets if tk.result is not None]
+        lat = np.array([r.latency_ms for r in served])
+        truncated = sum(r.truncated for r in served)
         # empty results are real serving failures (disconnected endpoints
         # or truncation to nothing) — count them explicitly; an `assert`
         # here would be compiled away under `python -O`
-        empty = sum(1 for tk in tickets if tk.done and not tk.result)
+        empty = sum(1 for r in served if not r.paths)
         total_empty += empty
-        ticks, requested, dispatched, rejected = (
+        ticks, requested, dispatched = (
             st.ticks - before[0], st.tasks_requested - before[1],
-            st.tasks_dispatched - before[2], st.rejected - before[3],
+            st.tasks_dispatched - before[2],
         )
+        rejected = svc.stats.rejected - rej_before
         print(
-            f"epoch {epoch}: {len(tickets)} queries | "
+            f"epoch {svc.epoch}: {len(served)}/{len(tickets)} queries | "
             f"p50 {np.percentile(lat, 50):6.1f}ms  "
             f"p99 {np.percentile(lat, 99):6.1f}ms | "
             f"ticks {ticks}  "
             f"peak queue {st.max_queue_depth}  "
             f"deduped {requested - dispatched}/{requested} tasks | "
-            f"reissued so far: {cluster.reissues}"
+            f"reissued so far: {svc.reissues}"
             + (f" | {truncated} truncated (best-effort)" if truncated else "")
             + (f" | {empty} EMPTY results" if empty else "")
-            + (f" | {rejected} rejected" if rejected else "")
+            + (f" | {rejected} rejected "
+               f"({svc.stats.rejected_deadline - slo_before} by SLO)"
+               if rejected else "")
         )
-        eids, new_w = stream.next_batch()
-        dt = cluster.apply_updates(eids, new_w)
+        t0 = time.perf_counter()
+        svc.update(UpdateBatch(*stream.next_batch()))
+        dt = time.perf_counter() - t0
         print(
-            f"  applied {eids.shape[0]} weight updates "
-            f"(index maintenance {dt * 1e3:.1f}ms)"
+            f"  applied 1 update batch → epoch {svc.epoch} "
+            f"(barrier + index maintenance {dt * 1e3:.1f}ms)"
         )
-        drift = d.drift()
-        if args.rebaseline_drift and drift > args.rebaseline_drift:
-            dt = cluster.rebaseline()
-            print(
-                f"  drift {drift:.3f} > {args.rebaseline_drift}: "
-                f"rebaselined bounds in {dt:.2f}s"
-            )
+        if svc.stats.rebaselines:
+            drift = d.drift()
+            print(f"  drift-triggered rebaselines so far: "
+                  f"{svc.stats.rebaselines} (current drift {drift:.3f})")
+    if svc.resyncs:
+        print(f"stale-replica re-syncs: {svc.resyncs} "
+              f"(revived workers replayed missed batches before serving)")
     if total_empty:
         print(f"WARNING: {total_empty} queries returned no paths")
-    print("serving run complete — non-truncated queries exact against the snapshot")
+    print("serving run complete — non-truncated queries exact against their epoch")
 
 
 if __name__ == "__main__":

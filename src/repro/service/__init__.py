@@ -1,0 +1,54 @@
+"""repro.service — the one typed serving API.
+
+Public surface of the serving stack: :class:`KSPService` (submit/poll/
+drain over the cross-query lockstep scheduler, epoch-versioned queries
+and updates, SLO admission), the request/response dataclasses, and the
+:class:`~repro.engine.registry.EngineSpec` registry for pluggable refine
+engines.  Everything underneath — ``dist.cluster.Cluster.query``,
+``dist.scheduler.QueryScheduler`` — is an internal.
+
+    from repro.service import KSPService, QueryRequest, ServiceConfig
+
+    svc = KSPService.build(graph, ServiceConfig(engine="dense_bf",
+                                                n_workers=8))
+    res = svc.query(s, t, k=3)       # res.paths, res.epoch, res.stats
+"""
+
+from repro.engine.registry import (  # noqa: F401
+    EngineSpec,
+    available_engines,
+    get_engine,
+    register_engine,
+)
+
+from .service import KSPService  # noqa: F401
+from .types import (  # noqa: F401
+    AdmissionError,
+    DeadlineExceeded,
+    EpochUnsatisfiable,
+    QueryRequest,
+    QueryResult,
+    QueueRejected,
+    ServiceConfig,
+    ServiceStats,
+    ServiceTicket,
+    UpdateBatch,
+)
+
+__all__ = [
+    "KSPService",
+    "QueryRequest",
+    "QueryResult",
+    "UpdateBatch",
+    "ServiceConfig",
+    "ServiceStats",
+    "ServiceTicket",
+    "AdmissionError",
+    "DeadlineExceeded",
+    "QueueRejected",
+    "EpochUnsatisfiable",
+    "EngineSpec",
+    "register_engine",
+    "get_engine",
+    "available_engines",
+]

@@ -1,0 +1,368 @@
+"""KSPService: the one public way to serve KSP queries.
+
+The facade over the distributed runtime — typed requests in, epoch-
+stamped results out, with a submit/poll/drain lifecycle wrapping the
+cross-query lockstep scheduler:
+
+* **Epoch-versioned serving.**  Every admitted query is stamped with the
+  graph epoch that will answer it; an :class:`UpdateBatch` is an *epoch
+  barrier* — the service freezes admission, drains the in-flight set
+  (those queries answer at the pre-update epoch), applies the batch
+  (bumping the epoch and patching every live worker's slab), then
+  resumes.  ``QueryRequest.min_epoch`` holds a query until the epoch
+  reaches it, or rejects it outright when no queued update can get
+  there.
+* **SLO admission.**  ``QueryRequest.deadline_ms`` rejects by *predicted*
+  queue delay (EWMA of recent tick latency × queue depth), not just
+  queue depth — the service refuses work it already knows it cannot
+  serve in time.
+* **Pluggable engines.**  ``ServiceConfig.engine`` names an
+  :class:`repro.engine.registry.EngineSpec`; no string-switch reaches
+  past the registry.
+
+``Cluster.query`` and ``QueryScheduler.submit/run`` remain as internals
+(and for tests); entry points — ``launch/serve.py``, the examples, the
+batch/scaleout benchmarks — construct a ``KSPService`` from a
+``ServiceConfig``.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+
+from repro.core.dtlp import DTLP
+from repro.dist.cluster import Cluster
+from repro.dist.scheduler import QueryScheduler, QueueFull, drive_trace
+
+from .types import (
+    AdmissionError,
+    DeadlineExceeded,
+    EpochUnsatisfiable,
+    QueryRequest,
+    QueryResult,
+    QueueRejected,
+    ServiceConfig,
+    ServiceStats,
+    ServiceTicket,
+    UpdateBatch,
+)
+
+
+class KSPService:
+    """Typed serving facade: queries and weight updates through one door.
+
+    Construct over a built index (``KSPService(dtlp, config)``), from a
+    raw graph (``KSPService.build(graph, config)``), or from a snapshot
+    (``KSPService.restore(snap, graph_factory, config)``).  Then:
+
+        svc = KSPService.build(graph, ServiceConfig(engine="dense_bf"))
+        ticket = svc.submit(QueryRequest(s=0, t=99, k=3))
+        svc.update(UpdateBatch(eids, new_w))       # epoch barrier
+        result = svc.poll(ticket) or ...           # or svc.drain()
+        result.epoch, result.paths, result.stats
+
+    ``query(s, t, k)`` is the one-shot convenience; ``replay(requests,
+    arrival_times=...)`` serves a timed trace on the scheduler's
+    simulated clock (the benchmark/driver path).
+    """
+
+    def __init__(self, dtlp: DTLP | None = None,
+                 config: ServiceConfig | None = None, *,
+                 cluster: Cluster | None = None):
+        if (dtlp is None) == (cluster is None):
+            raise ValueError("supply exactly one of dtlp or cluster")
+        self.config = config if config is not None else ServiceConfig()
+        cfg = self.config
+        if cluster is None:
+            cluster = Cluster(
+                dtlp, cfg.n_workers, engine=cfg.engine,
+                mesh=cfg.mesh, mesh_axis=cfg.mesh_axis,
+                straggler_factor=cfg.straggler_factor,
+                straggler_min_tasks=cfg.straggler_min_tasks,
+            )
+        self.cluster = cluster
+        self.dtlp = cluster.dtlp
+        self.scheduler = QueryScheduler(
+            cluster, max_in_flight=cfg.max_in_flight,
+            max_queue=cfg.max_queue, max_iterations=cfg.max_iterations,
+        )
+        self.stats = ServiceStats()
+        self._qid = itertools.count()
+        self._updates: deque[UpdateBatch] = deque()
+        self._held: list[ServiceTicket] = []  # waiting on min_epoch
+        self._by_sqid: dict[int, ServiceTicket] = {}
+
+    # ------------------------------------------------------- construction
+    @classmethod
+    def build(cls, graph, config: ServiceConfig | None = None,
+              **dtlp_kw) -> "KSPService":
+        """Build the DTLP index (``config.z``/``config.xi``) and serve it."""
+        cfg = config if config is not None else ServiceConfig()
+        d = DTLP.build(graph, z=cfg.z, xi=cfg.xi, **dtlp_kw)
+        return cls(d, cfg)
+
+    @classmethod
+    def restore(cls, snap: dict, graph_factory,
+                config: ServiceConfig | None = None,
+                **build_kw) -> "KSPService":
+        """Stand a service up from ``checkpoint()`` output.
+
+        With ``config=None`` the engine, worker count and index shape
+        (``z``/``xi``) all come from the snapshot; a supplied config
+        overrides them (a different shape re-places and starts fresh
+        worker stats — see ``Cluster.restore``).
+        """
+        cfg = config if config is not None else ServiceConfig(
+            engine=str(snap["engine"]), n_workers=int(snap["n_workers"]),
+            z=int(snap["z"]), xi=int(snap["xi"]),
+        )
+        cluster = Cluster.restore(
+            snap, graph_factory, z=cfg.z, xi=cfg.xi,
+            engine=cfg.engine, n_workers=cfg.n_workers,
+            mesh=cfg.mesh, mesh_axis=cfg.mesh_axis,
+            straggler_factor=cfg.straggler_factor,
+            straggler_min_tasks=cfg.straggler_min_tasks,
+            **build_kw,
+        )
+        return cls(config=cfg, cluster=cluster)
+
+    def checkpoint(self) -> dict:
+        return self.cluster.checkpoint()
+
+    # ----------------------------------------------------------- telemetry
+    @property
+    def epoch(self) -> int:
+        """Current graph epoch (one bump per applied UpdateBatch)."""
+        return self.cluster.epoch
+
+    @property
+    def resyncs(self) -> int:
+        """Stale-replica slab re-syncs across the fleet."""
+        return sum(w.stats.resyncs for w in self.cluster.workers)
+
+    @property
+    def reissues(self) -> int:
+        return self.cluster.reissues
+
+    def predicted_wait_ms(self) -> float:
+        """The SLO admission signal: predicted queue delay, in ms."""
+        return self.scheduler.predicted_wait() * 1e3
+
+    # ----------------------------------------------------------- admission
+    def submit(self, request: QueryRequest, *,
+               arrival: float | None = None) -> ServiceTicket:
+        """Admit one query; raises :class:`AdmissionError` subclasses.
+
+        Checks run in order: epoch satisfiability (``min_epoch`` beyond
+        every scheduled update → :class:`EpochUnsatisfiable`), the SLO
+        deadline (predicted queue delay > ``deadline_ms`` →
+        :class:`DeadlineExceeded`), then queue capacity
+        (:class:`QueueRejected`).  A satisfiable-but-not-yet ``min_epoch``
+        holds the ticket service-side until the barrier advances the
+        epoch far enough.
+        """
+        req = request
+        horizon = self.epoch + len(self._updates)
+        if req.min_epoch is not None and req.min_epoch > horizon:
+            self.stats.rejected_epoch += 1
+            raise EpochUnsatisfiable(
+                f"min_epoch {req.min_epoch} unreachable: epoch {self.epoch} "
+                f"+ {len(self._updates)} queued update batch(es)"
+            )
+        if req.deadline_ms is not None:
+            predicted = self.predicted_wait_ms()
+            if predicted > req.deadline_ms:
+                self.stats.rejected_deadline += 1
+                raise DeadlineExceeded(
+                    f"predicted queue delay {predicted:.1f}ms exceeds "
+                    f"deadline {req.deadline_ms:.1f}ms"
+                )
+        ticket = ServiceTicket(
+            qid=next(self._qid), request=req,
+            arrival=self.scheduler.clock if arrival is None else float(arrival),
+        )
+        if req.min_epoch is not None and req.min_epoch > self.epoch:
+            self._held.append(ticket)
+            self.stats.held_for_epoch += 1
+        else:
+            self._enqueue(ticket)
+        self.stats.submitted += 1
+        return ticket
+
+    def _enqueue(self, ticket: ServiceTicket) -> None:
+        try:
+            tk = self.scheduler.submit(
+                ticket.request.s, ticket.request.t, ticket.request.k,
+                arrival=ticket.arrival,
+            )
+        except QueueFull as e:
+            self.stats.rejected_queue += 1
+            raise QueueRejected(str(e)) from e
+        ticket._ticket = tk
+        self._by_sqid[tk.qid] = ticket
+
+    def update(self, batch: UpdateBatch, *, wait: bool = True) -> int:
+        """Queue a weight-update batch behind the epoch barrier.
+
+        With ``wait=True`` (default) ticks until the batch has applied —
+        every in-flight query finishes at its admitted epoch first —
+        and returns the new epoch.  ``wait=False`` queues it for the
+        next safe point (a later ``tick``/``poll``/``drain`` applies it).
+        """
+        if not isinstance(batch, UpdateBatch):
+            raise TypeError(
+                f"update takes an UpdateBatch, got {type(batch).__name__}"
+            )
+        self._updates.append(batch)
+        if wait:
+            while self._updates:
+                self.tick()
+        return self.epoch
+
+    # ------------------------------------------------------------ lifecycle
+    def tick(self) -> list[ServiceTicket]:
+        """One service round: barrier bookkeeping, held-query release,
+        one scheduler tick.  Returns the tickets completed on it."""
+        self._barrier()
+        self._release_held()
+        out = []
+        for tk in self.scheduler.tick():
+            ticket = self._by_sqid.pop(tk.qid, None)
+            if ticket is None:
+                continue  # raw-scheduler submission, not ours
+            ticket.result = QueryResult(
+                qid=ticket.qid,
+                paths=tuple(tk.result),
+                epoch=int(tk.epoch),
+                stats=tk.stats,
+                latency_ms=float(tk.latency or 0.0) * 1e3,
+            )
+            self.stats.completed += 1
+            out.append(ticket)
+        return out
+
+    def _barrier(self) -> None:
+        """Order queued UpdateBatches against in-flight queries: freeze
+        admission while any query is mid-flight, apply at the safe point."""
+        if not self._updates:
+            return
+        if self.scheduler.active:
+            self.scheduler.freeze_admission = True
+            self.stats.barrier_ticks += 1
+            return
+        while self._updates:
+            batch = self._updates.popleft()
+            self.cluster.apply_updates(batch.eids, batch.new_w)
+            self.stats.update_batches += 1
+        drift_gate = self.config.rebaseline_drift
+        if drift_gate and self.dtlp.drift() > drift_gate:
+            self.cluster.rebaseline()
+            self.stats.rebaselines += 1
+        self.scheduler.freeze_admission = False
+
+    def _release_held(self) -> None:
+        if not self._held:
+            return
+        still = []
+        for ticket in self._held:
+            if ticket.request.min_epoch <= self.epoch:
+                try:
+                    self._enqueue(ticket)
+                except QueueRejected:
+                    ticket.rejected = QueueRejected.reason
+            else:
+                still.append(ticket)
+        self._held = still
+
+    def poll(self, ticket: ServiceTicket) -> QueryResult | None:
+        """Advance the service one tick unless the ticket already
+        resolved; returns its result when available."""
+        if not ticket.done:
+            self.tick()
+        return ticket.result
+
+    def drain(self) -> list[ServiceTicket]:
+        """Tick until no queries (queued, held, or in flight) and no
+        update batches remain; returns the tickets that completed."""
+        out: list[ServiceTicket] = []
+        while (self.scheduler.queue or self.scheduler.active
+               or self._held or self._updates):
+            out.extend(self.tick())
+        return out
+
+    def query(self, s: int, t: int, k: int = 3, **req_kw) -> QueryResult:
+        """One-shot convenience: submit and serve to completion."""
+        ticket = self.submit(QueryRequest(int(s), int(t), int(k), **req_kw))
+        while not ticket.done:
+            self.tick()
+        if ticket.rejected is not None:
+            raise AdmissionError(
+                f"query ({s}→{t}) rejected after hold: {ticket.rejected}"
+            )
+        return ticket.result
+
+    # ------------------------------------------------------------ workloads
+    def replay(self, requests, *, arrival_times=None,
+               batch_window: float | None = None) -> list[ServiceTicket]:
+        """Serve a timed trace of :class:`QueryRequest`s; returns every
+        ticket — rejected ones included, with ``ticket.rejected`` set —
+        in submission order.
+
+        ``arrival_times`` gives each request's arrival on the scheduler's
+        simulated clock (seconds, ascending); ``None`` means all at once.
+        ``batch_window`` (seconds; default ``config.batch_window_ms``)
+        groups arrivals into the same admission burst when the scheduler
+        is under-occupied.  Admission — deadline, epoch, queue bound —
+        runs per request as it arrives, so an overloaded stretch of the
+        trace shows up as ``stats.rejected_*`` instead of an exception.
+        """
+        reqs = [
+            r if isinstance(r, QueryRequest) else QueryRequest(*r)
+            for r in requests
+        ]
+        sched = self.scheduler
+        if arrival_times is None:
+            arrivals = [sched.clock] * len(reqs)
+        else:
+            arrivals = [float(a) for a in arrival_times]
+            if len(arrivals) != len(reqs):
+                raise ValueError("arrival_times length != requests length")
+        window = (self.config.batch_window_ms / 1e3
+                  if batch_window is None else float(batch_window))
+        tickets: list[ServiceTicket] = []
+
+        def submit_at(i, arrival):
+            try:
+                tickets.append(self.submit(reqs[i], arrival=arrival))
+            except AdmissionError as e:
+                tickets.append(ServiceTicket(
+                    qid=next(self._qid), request=reqs[i],
+                    arrival=arrival, rejected=e.reason,
+                ))
+
+        drive_trace(
+            sched, arrivals, submit_at, self.tick,
+            extra_pending=lambda: bool(self._held or self._updates),
+            window=window,
+        )
+        return tickets
+
+    # --------------------------------------------------------------- faults
+    def kill(self, wid: int) -> None:
+        """Fault injection: kill a worker (replicas take over)."""
+        self.cluster.kill(wid)
+
+    def revive(self, wid: int) -> None:
+        """Bring a dead worker back; it re-syncs before serving again."""
+        self.cluster.revive(wid)
+
+    def mark_slow(self, wid: int, flag: bool = True) -> None:
+        """Manual straggler injection (auto-detection also sets this)."""
+        self.cluster.mark_slow(wid, flag)
+
+    def rescale(self, n_workers: int) -> None:
+        """Elastic rescale (drains in-flight queries first: worker slabs
+        and caches are rebuilt, so mid-flight hand-off is meaningless)."""
+        self.drain()
+        self.cluster.rescale(n_workers)

@@ -1,0 +1,210 @@
+"""Typed request/response surface of the KSP serving API.
+
+One vocabulary for everything that crosses the service boundary: a
+:class:`QueryRequest` in, a :class:`QueryResult` (with the epoch that
+answered it) out, an :class:`UpdateBatch` for the Δw stream, and a
+:class:`ServiceConfig` that replaces the per-entry-point argv/kwarg
+plumbing that used to be copied between ``launch/serve.py``, the
+examples and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+__all__ = [
+    "QueryRequest",
+    "QueryResult",
+    "UpdateBatch",
+    "ServiceConfig",
+    "ServiceStats",
+    "ServiceTicket",
+    "AdmissionError",
+    "DeadlineExceeded",
+    "QueueRejected",
+    "EpochUnsatisfiable",
+]
+
+
+class AdmissionError(RuntimeError):
+    """A query was rejected at admission; ``reason`` says why."""
+
+    reason = "rejected"
+
+
+class DeadlineExceeded(AdmissionError):
+    """Predicted queue delay exceeds the request's ``deadline_ms``."""
+
+    reason = "deadline"
+
+
+class QueueRejected(AdmissionError):
+    """The bounded admission queue is full."""
+
+    reason = "queue_full"
+
+
+class EpochUnsatisfiable(AdmissionError):
+    """``min_epoch`` is beyond the current epoch plus every queued
+    update batch — no scheduled future can satisfy the request."""
+
+    reason = "epoch"
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    """One KSP query: k shortest s→t paths.
+
+    ``deadline_ms`` opts into SLO admission: the service rejects
+    (:class:`DeadlineExceeded`) when the predicted queue delay — tick
+    latency EWMA × queue depth — already exceeds it, instead of
+    accepting work it cannot serve in time.  ``min_epoch`` demands
+    freshness: the query holds until the graph epoch reaches it (or is
+    rejected outright when no queued update can get there).
+    """
+
+    s: int
+    t: int
+    k: int = 3
+    deadline_ms: float | None = None
+    min_epoch: int | None = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be ≥ 1, got {self.k}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError("deadline_ms must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """The answer plus its provenance.
+
+    ``paths`` is the exact [(dist, vertex-tuple)] list, ascending, length
+    ≤ k.  ``epoch`` is the graph epoch the query was admitted — and,
+    thanks to the update barrier, answered — under; a caller comparing
+    answers across replicas or time uses it to know which weight state
+    it is looking at.  ``stats`` is the core ``QueryStats`` (iterations,
+    refine tasks, cache hits, truncation).
+    """
+
+    qid: int
+    paths: tuple
+    epoch: int
+    stats: Any
+    latency_ms: float
+
+    @property
+    def truncated(self) -> bool:
+        return bool(self.stats.truncated)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateBatch:
+    """One Δw batch: ``new_w[i]`` becomes the weight of edge ``eids[i]``.
+
+    Application is an epoch barrier: the service orders it after every
+    in-flight query (they answer at the pre-update epoch) and before
+    every query admitted afterwards (stamped with the new epoch).
+    """
+
+    eids: np.ndarray
+    new_w: np.ndarray
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "eids", np.asarray(self.eids, dtype=np.int64)
+        )
+        object.__setattr__(
+            self, "new_w", np.asarray(self.new_w, dtype=np.float64)
+        )
+        if self.eids.shape != self.new_w.shape:
+            raise ValueError(
+                f"eids {self.eids.shape} and new_w {self.new_w.shape} "
+                "must have identical shapes"
+            )
+
+    def __len__(self) -> int:
+        return int(self.eids.shape[0])
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    """Everything needed to stand up a :class:`~repro.service.KSPService`.
+
+    ``engine`` names an :class:`repro.engine.registry.EngineSpec`;
+    ``z``/``xi`` are DTLP build knobs (used by ``KSPService.build``);
+    the rest configures the cluster and scheduler underneath.  A mesh is
+    runtime configuration: supply ``mesh`` to route a mesh-capable
+    engine's refine through ``jax.shard_map``.
+    """
+
+    engine: str = "pyen"
+    n_workers: int = 4
+    max_in_flight: int = 8
+    max_queue: int | None = None
+    batch_window_ms: float = 0.0
+    max_iterations: int = 10_000
+    z: int = 24
+    xi: int = 6
+    mesh: Any = None
+    mesh_axis: Any = ("data", "model")
+    # 8x the fleet-median cost-normalized latency: loose enough that
+    # jit-compile transients never bench a healthy worker, tight enough
+    # to catch a genuinely overloaded one (10x+ in the paper's setting)
+    straggler_factor: float | None = 8.0
+    straggler_min_tasks: int = 8
+    rebaseline_drift: float = 0.0  # 0 disables drift-triggered rebaseline
+
+    def __post_init__(self):
+        from repro.engine.registry import get_engine
+
+        get_engine(self.engine)  # fail fast on unknown engines
+        if self.n_workers < 1:
+            raise ValueError("n_workers must be ≥ 1")
+        if self.max_in_flight < 1:
+            raise ValueError("max_in_flight must be ≥ 1")
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Service-level counters (admission, epoch barriers, rejections)."""
+
+    submitted: int = 0
+    completed: int = 0
+    rejected_deadline: int = 0  # SLO admission: predicted delay > deadline
+    rejected_queue: int = 0  # bounded admission queue overflow
+    rejected_epoch: int = 0  # min_epoch no scheduled update can reach
+    held_for_epoch: int = 0  # queries that waited for an update barrier
+    update_batches: int = 0  # UpdateBatches applied (epoch bumps)
+    barrier_ticks: int = 0  # ticks spent draining in-flight ahead of one
+    rebaselines: int = 0  # drift-triggered DTLP rebaselines
+
+    @property
+    def rejected(self) -> int:
+        return (self.rejected_deadline + self.rejected_queue
+                + self.rejected_epoch)
+
+
+@dataclasses.dataclass
+class ServiceTicket:
+    """One submitted query's handle through submit/poll/drain.
+
+    ``rejected`` carries the admission-failure reason when the query
+    never entered the scheduler (replay-style submission); otherwise the
+    ticket resolves to a :class:`QueryResult` once served.
+    """
+
+    qid: int
+    request: QueryRequest
+    arrival: float = 0.0
+    rejected: str | None = None
+    result: QueryResult | None = None
+    _ticket: Any = dataclasses.field(default=None, repr=False)  # scheduler's
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None or self.rejected is not None

@@ -1,0 +1,553 @@
+"""repro.service: the typed serving API — engine registry, epoch-
+versioned queries/updates (stale replicas provably cannot serve), SLO
+admission, straggler auto-detection, checkpoint round-trip."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.dtlp import DTLP
+from repro.core.sssp import graph_view
+from repro.core.yen import ksp
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+from repro.dist.cluster import Cluster, StaleReplicaError
+from repro.engine.registry import (
+    EngineSpec,
+    available_engines,
+    get_engine,
+    register_engine,
+)
+from repro.service import (
+    DeadlineExceeded,
+    EpochUnsatisfiable,
+    KSPService,
+    QueryRequest,
+    QueryResult,
+    QueueRejected,
+    ServiceConfig,
+    UpdateBatch,
+)
+
+
+@pytest.fixture(scope="module")
+def net():
+    g = grid_road_network(10, 10, seed=2)
+    return g, DTLP.build(g, z=16, xi=4)
+
+
+def rand_queries(g, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+        for _ in range(n)
+    ]
+
+
+def service(d, engine="pyen", workers=4, **cfg_kw):
+    cfg = ServiceConfig(engine=engine, n_workers=workers, **cfg_kw)
+    return KSPService(d, cfg)
+
+
+class TestEngineRegistry:
+    def test_builtins_registered(self):
+        assert {"pyen", "dense_bf"} <= set(available_engines())
+        assert get_engine("dense_bf").packs_slab
+        assert not get_engine("pyen").packs_slab
+        assert get_engine("dense_bf").supports_mesh
+
+    def test_unknown_engine_lists_available(self, net):
+        g, d = net
+        with pytest.raises(ValueError, match="pyen"):
+            Cluster(d, n_workers=2, engine="no_such_engine")
+        with pytest.raises(ValueError, match="no_such_engine"):
+            ServiceConfig(engine="no_such_engine")
+
+    def test_spec_passthrough_and_custom_engine(self, net):
+        """A custom EngineSpec plugs into the cluster with no string
+        switch anywhere: wrap the pyen refiner under a new name."""
+        g, d = net
+        spec = get_engine("pyen")
+        custom = EngineSpec(
+            name="pyen_wrapped", refine=spec.refine, packs_slab=False,
+        )
+        register_engine(custom, overwrite=True)
+        try:
+            cl = Cluster(d, n_workers=2, engine="pyen_wrapped")
+            s, t = rand_queries(g, 1, seed=3)[0]
+            got = cl.query(s, t, 3)
+            want = ksp(graph_view(g), s, t, 3)
+            assert [round(x, 6) for x, _ in got] == \
+                [round(x, 6) for x, _ in want]
+            # spec object passes through get_engine unchanged
+            assert get_engine(custom) is custom
+        finally:
+            from repro.engine import registry
+            registry._REGISTRY.pop("pyen_wrapped", None)
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_engine(get_engine("pyen"))
+
+    def test_mesh_on_meshless_engine_rejected(self, net):
+        g, d = net
+        with pytest.raises(ValueError, match="no device-mesh path"):
+            Cluster(d, n_workers=2, engine="pyen", mesh=object())
+
+
+class TestServiceExactness:
+    @pytest.mark.parametrize("engine", ["pyen", "dense_bf"])
+    def test_query_matches_oracle_and_carries_epoch(self, net, engine):
+        g, d = net
+        svc = service(d, engine=engine, workers=4)
+        view = graph_view(g)
+        for s, t in rand_queries(g, 6, seed=1):
+            res = svc.query(s, t, 3)
+            assert isinstance(res, QueryResult)
+            assert res.epoch == svc.epoch  # every result names its epoch
+            want = ksp(view, s, t, 3)
+            np.testing.assert_allclose(
+                [x for x, _ in res.paths], [x for x, _ in want], rtol=1e-5,
+            )
+
+    def test_replay_matches_sequential_under_interleaved_updates(self):
+        """Batched service answers equal the sequential cluster path
+        path-for-path across interleaved UpdateBatches, and results
+        carry the right epoch.  Separate graph/index instances so each
+        side owns its epoch counter."""
+        g_seq = grid_road_network(10, 10, seed=2)
+        g_svc = grid_road_network(10, 10, seed=2)
+        seq = Cluster(DTLP.build(g_seq, z=16, xi=4), n_workers=4,
+                      engine="pyen")
+        svc = service(DTLP.build(g_svc, z=16, xi=4), engine="pyen",
+                      workers=4, max_in_flight=4)
+        stream = WeightUpdateStream(g_seq, alpha=0.5, tau=0.5, seed=5)
+        for round_ in range(2):
+            batch = UpdateBatch(*stream.next_batch())
+            seq.apply_updates(batch.eids, batch.new_w)
+            svc.update(batch)
+            assert svc.epoch == round_ + 1
+            qs = rand_queries(g_seq, 6, seed=round_ + 20)
+            want = [seq.query(s, t, 3) for s, t in qs]
+            tickets = svc.replay([QueryRequest(s, t, 3) for s, t in qs])
+            assert [list(tk.result.paths) for tk in tickets] == want
+            assert all(tk.result.epoch == round_ + 1 for tk in tickets)
+
+    def test_submit_poll_drain_lifecycle(self, net):
+        g, d = net
+        svc = service(d, workers=2, max_in_flight=2)
+        qs = rand_queries(g, 4, seed=7)
+        tickets = [svc.submit(QueryRequest(s, t, 2)) for s, t in qs]
+        first = svc.poll(tickets[0])  # may need more ticks
+        svc.drain()
+        assert all(tk.done and tk.result is not None for tk in tickets)
+        if first is not None:
+            assert first is tickets[0].result
+
+
+class TestEpochConsistency:
+    """Serving stale weights must be impossible — the acceptance tests."""
+
+    def make(self, engine="dense_bf", workers=4, seed=2):
+        g = grid_road_network(10, 10, seed=seed)
+        d = DTLP.build(g, z=16, xi=4)
+        return g, service(d, engine=engine, workers=workers,
+                          straggler_factor=None)
+
+    def test_killed_worker_misses_batch_then_resyncs_on_revival(self):
+        """Kill a worker mid-update-batch, revive it, and prove its
+        replica re-syncs before serving — stale answers are a failure."""
+        g, svc = self.make()
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=6)
+        victim = 1
+        svc.kill(victim)
+        svc.update(UpdateBatch(*stream.next_batch()))  # victim misses it
+        svc.update(UpdateBatch(*stream.next_batch()))  # ... and this one
+        w = svc.cluster.workers[victim]
+        assert w.epoch == 0 and svc.epoch == 2  # provably stale
+        assert len(w.pending) == 2  # both batches deferred for replay
+
+        svc.revive(victim)
+        # force tasks through every worker, victim included
+        view = graph_view(g)
+        for s, t in rand_queries(g, 8, seed=9):
+            res = svc.query(s, t, 3)
+            want = ksp(view, s, t, 3)
+            np.testing.assert_allclose(
+                [x for x, _ in res.paths], [x for x, _ in want], rtol=1e-5,
+            )
+        if w.stats.tasks:  # routed to at all → it re-synced first
+            assert w.stats.resyncs >= 1
+            assert w.epoch == svc.epoch and not w.pending
+            assert svc.resyncs >= 1
+
+    def test_stale_slab_content_equals_fresh_pack_after_resync(self):
+        """The resync actually repairs the slab bytes, not just the tag."""
+        from repro.engine.dense import pack_subgraphs
+
+        g, svc = self.make()
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=8)
+        w = svc.cluster.workers[2]
+        stale = w.slab.adj.copy()
+        svc.kill(2)
+        svc.update(UpdateBatch(*stream.next_batch()))
+        svc.revive(2)
+        assert w.epoch != svc.epoch
+        gid = sorted(w.gids)[0]
+        sg = svc.dtlp.partition.subgraphs[gid]
+        w.execute([(gid, int(sg.vertices[sg.boundary_local[0]]),
+                    int(sg.vertices[sg.boundary_local[-1]]))], 2)
+        fresh = pack_subgraphs(
+            svc.dtlp.partition, svc.dtlp.graph.w, gids=sorted(w.gids), lane=8,
+        )
+        np.testing.assert_array_equal(w.slab.adj, fresh.adj)
+        assert w.slab.epoch == svc.epoch
+        assert not np.array_equal(stale, fresh.adj)  # the update did land
+
+    def test_dead_worker_refuses_to_serve(self):
+        g, svc = self.make()
+        svc.kill(0)
+        w = svc.cluster.workers[0]
+        with pytest.raises(StaleReplicaError, match="dead"):
+            w.execute([(sorted(w.gids)[0], 0, 1)], 2)
+
+    def test_stale_cache_entries_unreachable(self):
+        """Cache keys carry the epoch: pre-update partials can never
+        answer a post-update query."""
+        g, svc = self.make(engine="pyen")
+        s, t = rand_queries(g, 1, seed=11)[0]
+        svc.query(s, t, 3)
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=12)
+        svc.update(UpdateBatch(*stream.next_batch()))
+        res = svc.query(s, t, 3)
+        view = graph_view(g)
+        np.testing.assert_allclose(
+            [x for x, _ in res.paths],
+            [x for x, _ in ksp(view, s, t, 3)], rtol=1e-5,
+        )
+        # identical query, new epoch: the worker caches now hold BOTH
+        # epochs' entries under distinct keys — the re-run re-solved
+        # every pair it had already solved at epoch 0 instead of reusing
+        epochs_seen = {
+            key[0]
+            for w in svc.cluster.workers
+            for key in w.cache.data
+        }
+        assert epochs_seen == {0, 1}
+        repeated = [
+            key[1:] for w in svc.cluster.workers for key in w.cache.data
+            if key[0] == 1
+        ]
+        stale = {
+            key[1:] for w in svc.cluster.workers for key in w.cache.data
+            if key[0] == 0
+        }
+        assert any(k in stale for k in repeated)  # same task, re-solved
+
+    def test_update_barrier_orders_in_flight_before_batch(self):
+        g, svc = self.make(engine="pyen")
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=13)
+        s, t = rand_queries(g, 1, seed=14)[0]
+        ticket = svc.submit(QueryRequest(s, t, 3))
+        svc.tick()  # in flight at epoch 0
+        assert svc.scheduler.active
+        svc.update(UpdateBatch(*stream.next_batch()))
+        assert ticket.done and ticket.result.epoch == 0  # pre-update answer
+        assert svc.epoch == 1
+        assert svc.stats.barrier_ticks >= 1
+        res = svc.query(s, t, 3)
+        assert res.epoch == 1
+
+
+class TestSLOAdmission:
+    def test_cold_scheduler_always_admits(self, net):
+        g, d = net
+        svc = service(d, workers=2)
+        res = svc.query(0, g.n - 1, 2, deadline_ms=0.001)
+        assert res.paths  # no latency signal yet → no rejection
+
+    def test_predicted_delay_rejects(self, net):
+        g, d = net
+        svc = service(d, workers=2, max_in_flight=1)
+        # make the predictor hot: queue depth 3 × 10ms EWMA = 30ms wait
+        svc.scheduler.tick_latency_ewma = 0.010
+        for s, t in rand_queries(g, 3, seed=15):
+            svc.submit(QueryRequest(s, t, 2))
+        with pytest.raises(DeadlineExceeded):
+            svc.submit(QueryRequest(0, 9, 2, deadline_ms=5.0))
+        assert svc.stats.rejected_deadline == 1
+        # a lax deadline still gets in
+        svc.submit(QueryRequest(0, 9, 2, deadline_ms=10_000.0))
+        svc.drain()
+
+    def test_replay_counts_rejections_instead_of_raising(self, net):
+        g, d = net
+        svc = service(d, workers=2, max_in_flight=1, max_queue=1)
+        qs = rand_queries(g, 6, seed=16)
+        tickets = svc.replay([QueryRequest(s, t, 2) for s, t in qs])
+        assert len(tickets) == len(qs)
+        served = [tk for tk in tickets if tk.result is not None]
+        bounced = [tk for tk in tickets if tk.rejected is not None]
+        assert len(served) + len(bounced) == len(qs)
+        assert len(bounced) == svc.stats.rejected
+        assert all(tk.rejected == "queue_full" for tk in bounced)
+
+    def test_replay_tail_rejection_while_idle(self, net):
+        """Regression: a trace whose LAST request is rejected at
+        admission while the scheduler is drained must return the
+        rejected ticket, not crash on the idle clock-jump."""
+        g, d = net
+        svc = service(d, workers=2)
+        tickets = svc.replay([QueryRequest(0, 5, 3, min_epoch=10)])
+        assert len(tickets) == 1
+        assert tickets[0].rejected == "epoch"
+        qs = rand_queries(g, 2, seed=21)
+        mixed = [QueryRequest(s, t, 2) for s, t in qs] + [
+            QueryRequest(0, 5, 2, min_epoch=10)
+        ]
+        tickets = svc.replay(mixed)
+        assert tickets[-1].rejected == "epoch"
+        assert all(tk.result is not None for tk in tickets[:-1])
+
+    def test_min_epoch_hold_and_reject(self, net):
+        g, d = net
+        svc = service(d, workers=2)
+        with pytest.raises(EpochUnsatisfiable):
+            svc.submit(QueryRequest(0, 9, 2, min_epoch=svc.epoch + 1))
+        assert svc.stats.rejected_epoch == 1
+        stream = WeightUpdateStream(g, alpha=0.4, tau=0.5, seed=17)
+        svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+        target = svc.epoch + 1
+        ticket = svc.submit(QueryRequest(0, 9, 2, min_epoch=target))
+        assert not ticket.done and svc.stats.held_for_epoch == 1
+        svc.drain()
+        assert ticket.result.epoch == target
+
+
+class TestStragglerAutoDetection:
+    def make(self, factor=4.0):
+        g = grid_road_network(10, 10, seed=2)
+        d = DTLP.build(g, z=16, xi=4)
+        return g, Cluster(d, n_workers=4, engine="pyen",
+                          straggler_factor=factor, straggler_min_tasks=4)
+
+    def _prime(self, cl, slow_wid, slow_ewma=1.0, base=0.001):
+        for w in cl.workers:
+            slow = w.wid == slow_wid
+            w.stats.lat_ewma = slow_ewma if slow else base
+            w.stats.lat_min = slow_ewma if slow else base
+            w.stats.lat_samples = 10
+            w.stats.lat_calls = 10
+
+    def test_route_auto_benches_straggler_and_reissues(self):
+        g, cl = self.make()
+        slow_wid = int(cl.placement.primary[0])
+        self._prime(cl, slow_wid)  # 1000x the fleet median
+        w, reissued = cl.route(0)
+        assert reissued and w.wid == int(cl.placement.replica[0])
+        assert cl.workers[slow_wid].slow  # route auto-set the flag
+        assert cl.auto_slowed == 1
+        # answers stay exact with the straggler benched
+        view = graph_view(g)
+        for s, t in rand_queries(g, 4, seed=18):
+            got = cl.query(s, t, 3)
+            want = ksp(view, s, t, 3)
+            assert [round(x, 6) for x, _ in got] == \
+                [round(x, 6) for x, _ in want]
+
+    def test_probation_recovers_false_positive(self):
+        """An auto-benched worker is probed every few routes; once its
+        EWMA reads fleet-normal again it rejoins (cold-start jit noise
+        must not bench a healthy worker forever)."""
+        from repro.dist.cluster import _PROBE_EVERY
+
+        g, cl = self.make()
+        slow_wid = int(cl.placement.primary[0])
+        self._prime(cl, slow_wid)
+        cl.route(0)
+        assert cl.workers[slow_wid].slow and cl.auto_slowed == 1
+        # the worker "recovers" (probes would pull the EWMA down)
+        cl.workers[slow_wid].stats.lat_ewma = 0.001
+        for _ in range(_PROBE_EVERY):
+            cl.route(0)
+        assert not cl.workers[slow_wid].slow
+        assert cl.auto_recovered == 1
+        w, reissued = cl.route(0)
+        assert w.wid == slow_wid and not reissued
+
+    def test_still_slow_worker_stays_benched_through_probes(self):
+        from repro.dist.cluster import _PROBE_EVERY
+
+        g, cl = self.make()
+        slow_wid = int(cl.placement.primary[0])
+        self._prime(cl, slow_wid)
+        cl.route(0)
+        assert cl.workers[slow_wid].slow
+        for _ in range(3 * _PROBE_EVERY):
+            cl.route(0)  # EWMA stays high: probation never releases
+        assert cl.workers[slow_wid].slow
+        assert cl.auto_recovered == 0
+
+    def test_mark_slow_clears_auto_detection(self):
+        g, cl = self.make()
+        slow_wid = int(cl.placement.primary[0])
+        self._prime(cl, slow_wid)
+        cl.route(0)
+        assert cl.workers[slow_wid].slow
+        cl.mark_slow(slow_wid, False)  # manual override stays in charge
+        cl.workers[slow_wid].stats.lat_ewma = 0.001  # recovered
+        w, reissued = cl.route(0)
+        assert w.wid == slow_wid and not reissued
+
+    def test_disabled_by_default_and_below_min_samples(self):
+        g, cl = self.make(factor=None)
+        slow_wid = int(cl.placement.primary[0])
+        self._prime(cl, slow_wid)
+        w, reissued = cl.route(0)
+        assert w.wid == slow_wid and not reissued  # detection off
+        g2, cl2 = self.make()
+        self._prime(cl2, int(cl2.placement.primary[0]))
+        for w_ in cl2.workers:
+            w_.stats.lat_samples = 2  # below straggler_min_tasks
+        w, reissued = cl2.route(0)
+        assert not reissued
+
+    def test_execute_feeds_latency_ewma(self):
+        g, cl = self.make(factor=None)
+        for s, t in rand_queries(g, 4, seed=19):
+            cl.query(s, t, 3)
+        touched = [w for w in cl.workers if w.stats.tasks]
+        assert touched
+        # samples count solved (cache-miss) tasks, never exceed routed
+        assert all(
+            0 < w.stats.lat_samples <= w.stats.tasks for w in touched
+        )
+        scored = [w for w in touched if w.stats.lat_calls > 0]
+        assert scored  # the fleet produced a usable signal
+        assert all(w.stats.lat_ewma > 0.0 for w in scored)
+        assert all(0.0 < w.stats.lat_min for w in scored)
+
+
+class TestCheckpointRoundTrip:
+    def test_placement_stats_epoch_survive_restore(self):
+        """Regression: format-1 checkpoints dropped Placement load state
+        and per-worker stats, so a restored cluster re-placed from
+        scratch and forgot its telemetry."""
+        g = grid_road_network(10, 10, seed=7)
+        d = DTLP.build(g, z=16, xi=4)
+        cl = Cluster(d, n_workers=3, engine="dense_bf")
+        stream = WeightUpdateStream(g, alpha=0.4, tau=0.5, seed=8)
+        cl.apply_updates(*stream.next_batch())
+        cl.apply_updates(*stream.next_batch())
+        qs = rand_queries(g, 5, seed=9)
+        want = [cl.query(s, t, 3) for s, t in qs]
+        cl.mark_slow(2)
+        snap = cl.checkpoint()
+        assert snap["format"] == 2 and snap["epoch"] == 2
+
+        cl2 = Cluster.restore(
+            snap, lambda: grid_road_network(10, 10, seed=7), z=16, xi=4
+        )
+        # identical epoch (restore-after-updates regression)
+        assert cl2.epoch == cl.epoch == 2
+        # placement round-tripped, not re-derived
+        np.testing.assert_array_equal(cl2.placement.primary,
+                                      cl.placement.primary)
+        np.testing.assert_array_equal(cl2.placement.replica,
+                                      cl.placement.replica)
+        np.testing.assert_array_equal(cl2.placement.load, cl.placement.load)
+        # per-worker stats and health flags arrived verbatim (checked
+        # BEFORE cl2 serves anything and accrues its own)
+        for wa, wb in zip(cl.workers, cl2.workers):
+            assert dataclasses.asdict(wa.stats) == dataclasses.asdict(wb.stats)
+            assert wa.slow == wb.slow and wa.alive == wb.alive
+            assert wb.epoch == 2
+        # and identical answers
+        got = [cl2.query(s, t, 3) for s, t in qs]
+        for a, b in zip(want, got):
+            assert [round(x, 8) for x, _ in a] == \
+                [round(x, 8) for x, _ in b]
+
+    def test_restore_with_different_worker_count_re_places(self):
+        g = grid_road_network(10, 10, seed=7)
+        d = DTLP.build(g, z=16, xi=4)
+        cl = Cluster(d, n_workers=3, engine="pyen")
+        snap = cl.checkpoint()
+        cl2 = Cluster.restore(
+            snap, lambda: grid_road_network(10, 10, seed=7), z=16, xi=4,
+            n_workers=5,
+        )
+        assert cl2.n_workers == 5
+        s, t = rand_queries(g, 1, seed=10)[0]
+        assert cl2.query(s, t, 2) == cl.query(s, t, 2)
+
+    def test_restore_defaults_to_snapshot_index_shape(self):
+        """Regression: restore with config=None used to rebuild the DTLP
+        at the DEFAULT z/xi and then adopt the snapshot placement for a
+        different partition — crashing worker construction.  The
+        snapshot now records z/xi and restore defaults to them."""
+        g = grid_road_network(10, 10, seed=7)
+        svc = KSPService.build(
+            g, ServiceConfig(engine="pyen", n_workers=3, z=16, xi=4)
+        )
+        want = svc.query(3, g.n - 2, 2)
+        snap = svc.checkpoint()
+        assert snap["z"] == 16 and snap["xi"] == 4
+        svc2 = KSPService.restore(
+            snap, lambda: grid_road_network(10, 10, seed=7)
+        )
+        assert svc2.config.z == 16 and svc2.config.xi == 4
+        got = svc2.query(3, g.n - 2, 2)
+        assert got.paths == want.paths and got.epoch == want.epoch
+        # an explicitly DIFFERENT shape re-places instead of crashing
+        svc3 = KSPService.restore(
+            snap, lambda: grid_road_network(10, 10, seed=7),
+            ServiceConfig(engine="pyen", n_workers=3, z=24, xi=4),
+        )
+        assert svc3.query(3, g.n - 2, 2).paths == want.paths
+
+    def test_service_checkpoint_restore(self):
+        g = grid_road_network(10, 10, seed=7)
+        svc = KSPService.build(
+            g, ServiceConfig(engine="pyen", n_workers=3, z=16, xi=4)
+        )
+        stream = WeightUpdateStream(g, alpha=0.4, tau=0.5, seed=11)
+        svc.update(UpdateBatch(*stream.next_batch()))
+        want = svc.query(3, g.n - 2, 2)
+        snap = svc.checkpoint()
+        svc2 = KSPService.restore(
+            snap, lambda: grid_road_network(10, 10, seed=7),
+            ServiceConfig(engine="pyen", n_workers=3, z=16, xi=4),
+        )
+        got = svc2.query(3, g.n - 2, 2)
+        assert got.paths == want.paths
+        assert got.epoch == want.epoch == 1
+
+
+class TestTypes:
+    def test_update_batch_validates(self):
+        with pytest.raises(ValueError, match="identical shapes"):
+            UpdateBatch(np.arange(3), np.ones(2))
+        b = UpdateBatch([1, 2], [0.5, 1.5])
+        assert len(b) == 2 and b.eids.dtype == np.int64
+
+    def test_query_request_validates(self):
+        with pytest.raises(ValueError, match="k must be"):
+            QueryRequest(0, 1, k=0)
+        with pytest.raises(ValueError, match="deadline_ms"):
+            QueryRequest(0, 1, deadline_ms=-1.0)
+
+    def test_update_requires_typed_batch(self, net):
+        g, d = net
+        svc = service(d, workers=2)
+        with pytest.raises(TypeError, match="UpdateBatch"):
+            svc.update((np.arange(2), np.ones(2)))
+
+    def test_queue_rejected_is_admission_error(self, net):
+        g, d = net
+        svc = service(d, workers=2, max_in_flight=1, max_queue=0)
+        svc.submit(QueryRequest(0, 9, 2))  # free-slot grace admits one
+        with pytest.raises(QueueRejected):
+            svc.submit(QueryRequest(2, 7, 2))
+        assert svc.stats.rejected_queue == 1
+        svc.drain()
