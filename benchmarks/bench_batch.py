@@ -20,6 +20,11 @@ rate is reported alongside the throughput rows (fig="batch_slo" rows in
 dense_bf qps at concurrency 8 drops below 90% of concurrency 1 (best of
 3 passes each — strict equality would flake on shared-runner noise) —
 batching must never cost throughput.
+
+``--engine`` takes any registered spec — ``--engine pallas_bf`` replays
+the same trace through the Pallas ``bf_relax`` backend (interpret-mode
+off-TPU; answers are byte-identical to dense_bf, so the rows compare
+backend cost on an equal-output footing).
 """
 
 from __future__ import annotations

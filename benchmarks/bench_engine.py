@@ -84,10 +84,94 @@ def bench_kernel_vs_ref(quick=True):
     return emit("engine_kernels", rows)
 
 
-def main(quick=True):
-    bench_bf_throughput(quick)
-    bench_kernel_vs_ref(quick)
+# CLI name of the non-default backend → the engine spec that runs it
+# (the jnp backend IS dense_bf, the comparison baseline, so it is not a
+# choice here — comparing it against itself would be vacuous)
+_BACKEND_ENGINES = {"pallas-interpret": "pallas_bf"}
+
+
+def bench_backend_compare(quick=True, backend="pallas-interpret",
+                          smoke=False):
+    """Replay ONE serving trace (queries + an update-batch epoch
+    barrier) on dense_bf and on the requested backend's engine, assert
+    byte-identical paths/epochs, and record the comparison row in
+    ``results/bench_engine.json``.  Exits non-zero on divergence or
+    error — the CI gate for the Pallas solve path."""
+    from repro.core.dtlp import DTLP
+    from repro.data.roadnet import WeightUpdateStream, grid_road_network
+    from repro.service import (
+        KSPService, QueryRequest, ServiceConfig, UpdateBatch,
+    )
+
+    from .common import rand_queries
+
+    rows_cols = 6 if smoke else (8 if quick else 12)
+    n_q = 4 if smoke else 8
+    g = grid_road_network(rows_cols, rows_cols, seed=0)
+    qs = rand_queries(g, n_q, seed=3)
+    stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=1)
+    batch = stream.next_batch()
+    cut = n_q // 2
+
+    def run(engine):
+        # fresh graph per engine: updates mutate weights/epoch in place,
+        # and both engines must replay the trace from the same epoch 0
+        g_run = grid_road_network(rows_cols, rows_cols, seed=0)
+        svc = KSPService(
+            DTLP.build(g_run, z=12, xi=4),
+            ServiceConfig(engine=engine, n_workers=2, max_in_flight=4),
+        )
+        svc.replay([QueryRequest(s, t, 3) for s, t in qs[:cut]])  # warm jit
+        t0 = time.perf_counter()
+        tickets = svc.replay([QueryRequest(s, t, 3) for s, t in qs[:cut]])
+        svc.update(UpdateBatch(*batch))
+        tickets += svc.replay([QueryRequest(s, t, 3) for s, t in qs[cut:]])
+        dt = time.perf_counter() - t0
+        answers = [(tk.result.paths, tk.result.epoch) for tk in tickets]
+        return answers, dt
+
+    engine = _BACKEND_ENGINES[backend]
+    want, base_s = run("dense_bf")
+    got, cmp_s = run(engine)
+    match = got == want
+    rows = [dict(
+        bench="backend_compare", backend=backend, engine=engine,
+        n_queries=n_q, update_batches=1,
+        dense_bf_s=round(base_s, 3), backend_s=round(cmp_s, 3),
+        qps_dense_bf=round(n_q / base_s, 2),
+        qps_backend=round(n_q / cmp_s, 2),
+        identical_paths_and_epochs=match,
+        note="interpret-mode Pallas timing is NOT hardware-indicative; "
+             "the row records parity + jnp-vs-pallas-interpret cost",
+    )]
+    emit("engine", rows)
+    if not match:
+        raise SystemExit(
+            f"DIVERGENCE: engine {engine!r} ({backend}) did not reproduce "
+            "dense_bf paths/epochs on the smoke trace"
+        )
+    print(f"backend gate OK: {engine} byte-identical to dense_bf "
+          f"({n_q} queries across an epoch barrier)")
+    return rows
+
+
+def main(quick=True, smoke=False, backend=None):
+    if not smoke:
+        bench_bf_throughput(quick)
+        bench_kernel_vs_ref(quick)
+    bench_backend_compare(quick, backend=backend or "pallas-interpret",
+                          smoke=smoke)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: only the backend parity gate")
+    ap.add_argument("--backend", choices=sorted(_BACKEND_ENGINES),
+                    default="pallas-interpret",
+                    help="solver backend to compare against dense_bf")
+    a = ap.parse_args()
+    main(quick=not a.full, smoke=a.smoke, backend=a.backend)

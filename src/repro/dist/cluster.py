@@ -6,7 +6,9 @@ to the subgraphs' primary workers — falling back to replicas on failure
 or straggling (re-issue), raising on double failure (data loss).
 
 Refine engines are pluggable :class:`repro.engine.registry.EngineSpec`s
-(the builtin ``"pyen"`` and ``"dense_bf"`` reproduce the original two);
+(builtin: host ``"pyen"``, jnp ``"dense_bf"``, and ``"pallas_bf"`` — the
+fused Pallas kernel backend; each spec's ``SolverBackend`` carries the
+slab geometry, so no lane/packing constants live here);
 ``repro.service.KSPService`` is the public serving entry point over this
 module — ``Cluster.query`` is kept as the internal sequential driver.
 
@@ -137,9 +139,11 @@ class Worker:
             # assignments) keeps no slab; it is never routed tasks
             from repro.engine.dense import pack_subgraphs
 
+            # all slab geometry (lane alignment, bucket shapes) comes
+            # from the engine backend's SlabLayout — never from here
             self.slab = pack_subgraphs(
                 dtlp.partition, dtlp.graph.w, gids=sorted(self.gids),
-                lane=spec.lane, epoch=self.epoch,
+                layout=spec.layout, epoch=self.epoch,
             )
             self.row_of = {int(g): i for i, g in enumerate(self.slab.gids)}
 

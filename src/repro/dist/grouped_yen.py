@@ -4,9 +4,16 @@ A dense worker receives one iteration's refine tasks — (subgraph row,
 src, dst) partial-KSP problems on its packed slab — and runs ALL of them
 through Yen's deviation paradigm in lockstep: every round, every active
 task contributes its spur problems, and the whole round becomes ONE
-``bf_solve_grouped``/``bf_parents_grouped`` call with problems co-located
-next to their subgraph's adjacency row (zero gather — the layout
-``engine.dense`` was designed for, Section 6.1's SubgraphBolt batching).
+grouped solve with problems co-located next to their subgraph's
+adjacency row (zero gather — the layout ``engine.dense`` was designed
+for, Section 6.1's SubgraphBolt batching).
+
+Execution is pluggable: a :class:`repro.engine.backend.SolverBackend`
+supplies both the solve (jnp ``bf_solve_grouped`` or the Pallas
+``bf_relax`` fixed point) and the bucket geometry (its ``SlabLayout``
+owns the hot-row packing rule); a mesh ``solver`` override (a
+``shard_refine.make_refine_fn`` product) replaces the execution while
+the backend keeps supplying geometry.
 
 Exactness: per task this is exactly ``engine.yen_engine.engine_ksp`` —
 the grouping changes the schedule, not the math.
@@ -18,54 +25,24 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.engine.backend import JnpBackend
 from repro.engine.dense import INF
-from repro.engine.yen_engine import _extract, grouped_solver
+from repro.engine.yen_engine import _extract
 
 _INF = float(INF)
 
-
-def _pow2(n: int) -> int:
-    return 1 << (n - 1).bit_length() if n > 1 else 1
+_DEFAULT_BACKEND = JnpBackend()
 
 
-def _bucket_shape(per_row_counts, s_multiple):
-    """Pick the [S_pad, J_pad] bucket minimizing padded area.
-
-    A row with more jobs than ``J_pad`` is split across duplicate slab
-    rows, so the padded problem count is Σ ceil(n_r / J) · J instead of
-    n_rows · max(n_r) — without the split, one hot subgraph (the common
-    case when many concurrent queries cross the same boundary region)
-    inflates EVERY row to its pow2-rounded max and the merged batch costs
-    more compute than the per-query solves it replaced.  Candidates stay
-    pow2 (and S a multiple of ``s_multiple``) so shapes reuse jit buckets.
-    """
-    j_max = _pow2(max(per_row_counts))
-    best = None
-    j = 1
-    while j <= j_max:
-        s_need = sum(-(-n // j) for n in per_row_counts)
-        s_pad = _pow2(s_need)
-        if s_pad % s_multiple:
-            s_pad = -(-s_pad // s_multiple) * s_multiple
-        # padded relax compute ∝ S·J; the +1 term charges the [S, z, z]
-        # adjacency duplication/transfer that row-splitting adds
-        cost = s_pad * (j + 1)
-        if best is None or cost < best[0]:
-            best = (cost, s_pad, j)
-        j *= 2
-    _, s_pad, j_pad = best
-    return s_pad, j_pad
-
-
-def _solve_round(adj, jobs, solver, s_multiple):
+def _solve_round(adj, jobs, solver, s_multiple, backend):
     """One grouped solve.  ``jobs``: (row, spur, banned_v, banned_next, cap).
 
     Returns per-job (dist[z], parent[z]) numpy rows, in job order.
     Rows/problems are packed into [S', J, z] with S' the slab rows this
-    round touches — hot rows split across duplicates (``_bucket_shape``)
-    — padded to a jit-friendly bucket that is a multiple of
-    ``s_multiple`` (the mesh device count when the solver is a shard_map
-    refine fn).
+    round touches — hot rows split across duplicates (the backend
+    layout's ``bucket_shape``) — padded to a jit-friendly bucket that is
+    a multiple of ``s_multiple`` (the mesh device count when the solver
+    is a shard_map refine fn).
     """
     if not jobs:
         return []
@@ -73,7 +50,9 @@ def _solve_round(adj, jobs, solver, s_multiple):
     counts: dict = {}
     for row, *_ in jobs:
         counts[row] = counts.get(row, 0) + 1
-    S_pad, J_pad = _bucket_shape(list(counts.values()), s_multiple)
+    S_pad, J_pad = backend.layout.bucket_shape(
+        list(counts.values()), s_multiple
+    )
 
     slab_rows: list[int] = []  # original slab row per packed position
     cursor: dict = {}  # row → [packed position, jobs filled there]
@@ -103,9 +82,8 @@ def _solve_round(adj, jobs, solver, s_multiple):
         bn[sr, j] = banned_next
         cap[sr, j] = job_cap
 
-    if solver is None:
-        solver = grouped_solver(S_pad, J_pad, z)
-    dist, parent = solver(
+    solve = solver if solver is not None else backend.solve_grouped
+    dist, parent = solve(
         jnp.asarray(adj_used), jnp.asarray(init), jnp.asarray(bv),
         jnp.asarray(so), jnp.asarray(bn), jnp.asarray(cap),
     )
@@ -186,14 +164,17 @@ class _TaskState:
 
 
 def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
-                s_multiple: int = 1):
+                s_multiple: int = 1, backend=None):
     """K shortest simple paths for a batch of same-slab tasks.
 
     adj     : float32[S, z, z] packed slab (INF off-edges, 0 diagonal)
     tasks   : [(slab_row, src, dst)] with local vertex ids
-    solver  : (adj, init, bv, so, bn, cap) → (dist, parent) override —
-              e.g. a ``repro.dist.shard_refine.make_refine_fn`` product;
-              default is the shape-bucketed jit solver.
+    backend : a :class:`repro.engine.backend.SolverBackend` supplying
+              the grouped solve and its bucket geometry; default jnp.
+    solver  : (adj, init, bv, so, bn, cap) → (dist, parent) execution
+              override — e.g. a ``repro.dist.shard_refine.
+              make_refine_fn`` product; the backend still supplies
+              geometry.
     Returns one [(dist, path-tuple)] list per task, ascending.
 
     A zero-task batch returns [] — the batched dispatch path produces one
@@ -201,13 +182,16 @@ def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
     """
     if not tasks:
         return []
+    if backend is None:
+        backend = _DEFAULT_BACKEND
     states = [_TaskState(row, src, dst) for row, src, dst in tasks]
 
     # round 0: every task's P1 is a single unmasked solve
     z = adj.shape[-1]
     jobs = [(st.row, st.src, np.zeros(z, bool), np.zeros(z, bool), _INF)
             for st in states]
-    for st, (dist, parent) in zip(states, _solve_round(adj, jobs, solver, s_multiple)):
+    for st, (dist, parent) in zip(
+            states, _solve_round(adj, jobs, solver, s_multiple, backend)):
         if dist[st.dst] >= _INF / 2:
             st.done = True
             continue
@@ -230,7 +214,7 @@ def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
             jobs.extend(j)
             metas.append(m)
             owners.append(st)
-        results = _solve_round(adj, jobs, solver, s_multiple)
+        results = _solve_round(adj, jobs, solver, s_multiple, backend)
         off = 0
         for st, meta in zip(owners, metas):
             st.absorb(meta, results[off : off + len(meta)])

@@ -1,0 +1,148 @@
+"""SolverBackend: the pluggable grouped-solve execution layer.
+
+One backend = one way to run the hot loop — a converged masked grouped
+Bellman–Ford over the owner-aligned [S, J, z] slab layout — plus the
+:class:`~repro.engine.layout.SlabLayout` geometry that execution wants.
+Engine dispatch used to mean "which jnp function"; it now means "which
+backend object":
+
+* :class:`JnpBackend` — the reference path: the shape-bucketed jitted
+  ``bf_solve_grouped`` + ``bf_parents_grouped`` pair
+  (``engine.yen_engine.grouped_solver``), tight lane=8 slabs.
+* :class:`PallasBackend` — a fixed-point ``lax.while_loop`` over the
+  fused ``kernels.bf_relax`` Pallas kernel (128-lane slabs, VMEM-
+  bounded J buckets), with parents recovered post-convergence by the
+  same ``bf_parents_grouped`` the jnp path uses.  On non-TPU hosts the
+  kernel auto-falls back to ``interpret=True`` so the whole suite runs
+  without a TPU.
+
+Both backends implement the same contract —
+
+    solve_grouped(adj, init, banned_v, spur_onehot, banned_next, cap)
+        -> (dist [S, J, z], parents [S, J, z])
+
+— the exact signature ``dist.grouped_yen._solve_round`` dispatches (and
+that a ``shard_refine.make_refine_fn`` mesh solver overrides).  The two
+relax the same candidate set with exact f32 min-plus arithmetic, so
+their fixed points — and therefore every path served through them — are
+byte-identical (asserted in tests/test_backend.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layout import JNP_LAYOUT, PALLAS_LAYOUT, SlabLayout
+
+__all__ = ["SolverBackend", "JnpBackend", "PallasBackend"]
+
+
+class SolverBackend:
+    """Interface: grouped-solve execution + the slab geometry it wants."""
+
+    name: str = "abstract"
+    layout: SlabLayout
+
+    def solve_grouped(self, adj, init, banned_v, spur_onehot, banned_next,
+                      cap):
+        """Converged (dist [S,J,z], parents [S,J,z]) for one bucket.
+
+        ``adj`` [S,z,z] min-plus slab; ``init`` [S,J,z] f32 (+INF except
+        sources/warm starts); ``banned_v``/``spur_onehot``/
+        ``banned_next`` [S,J,z] bool masks; ``cap`` [S,J] f32 distance
+        caps (early termination).  All-INF padding rows must no-op.
+        """
+        raise NotImplementedError
+
+    def __repr__(self):  # pragma: no cover - debugging nicety
+        return f"{type(self).__name__}(layout={self.layout.name!r})"
+
+
+class JnpBackend(SolverBackend):
+    """The jnp reference solver on tight lane=8 slabs."""
+
+    name = "jnp"
+    layout = JNP_LAYOUT
+
+    def solve_grouped(self, adj, init, banned_v, spur_onehot, banned_next,
+                      cap):
+        from .yen_engine import grouped_solver
+
+        S, J, z = init.shape
+        return grouped_solver(S, J, z)(
+            adj, init, banned_v, spur_onehot, banned_next, cap
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_grouped_solver(S, J, z, interpret):
+    """Shape-bucketed jitted Pallas fixed-point (solve + parents).
+
+    The while_loop iterates the fused ``bf_relax`` kernel — which
+    applies the spur cut and the cap clamp in-kernel — re-masking
+    ``banned_v`` between iterations (a banned vertex can be re-reached
+    through relaxation, exactly as in ``bf_solve_grouped``).  The
+    candidate sets and f32 arithmetic match the jnp path op-for-op, so
+    convergence takes the same iteration count and lands on the same
+    bytes; parents then come from the shared ``bf_parents_grouped``.
+    """
+    from repro.kernels.bf_relax import bf_relax
+
+    from .dense import INF, bf_parents_grouped
+
+    @jax.jit
+    def run(adj, init, bv, so, bn, cap):
+        so_f = so.astype(jnp.float32)
+        bn_f = bn.astype(jnp.float32)
+        dist0 = jnp.where(bv, INF, init)
+
+        def cond(state):
+            _, changed, it = state
+            return changed & (it < z)
+
+        def body(state):
+            dist, _, it = state
+            new = bf_relax(dist, adj, so_f, bn_f, cap, interpret=interpret)
+            new = jnp.where(bv, INF, new)
+            changed = jnp.any(new < dist)
+            return new, changed, it + 1
+
+        dist, _, _ = jax.lax.while_loop(
+            cond, body, (dist0, jnp.bool_(True), jnp.int32(0))
+        )
+        parent = bf_parents_grouped(adj, dist, so, bn)
+        return dist, parent
+
+    return run
+
+
+class PallasBackend(SolverBackend):
+    """The Pallas ``bf_relax`` kernel iterated to its fixed point.
+
+    ``interpret=None`` (default) auto-detects: the kernel runs compiled
+    on TPU backends and in interpret mode everywhere else, so the same
+    engine spec serves on a laptop and a v5e pod.  Pass ``True``/
+    ``False`` to force either (tests force ``True`` for parity runs).
+    """
+
+    name = "pallas"
+    layout = PALLAS_LAYOUT
+
+    def __init__(self, interpret: bool | None = None):
+        self.interpret = interpret
+
+    @property
+    def _interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return bool(self.interpret)
+
+    def solve_grouped(self, adj, init, banned_v, spur_onehot, banned_next,
+                      cap):
+        S, J, z = init.shape
+        return _pallas_grouped_solver(S, J, z, self._interpret)(
+            adj, init, banned_v, spur_onehot, banned_next, cap
+        )

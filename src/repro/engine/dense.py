@@ -46,19 +46,21 @@ class SubgraphSlab:
 
 def pack_subgraphs(
     partition, weights, z_pad: int | None = None, gids=None,
-    lane: int = 128, epoch: int = 0,
+    lane: int = 128, epoch: int = 0, layout=None,
 ) -> SubgraphSlab:
     """Dense-pack subgraphs of a core Partition under `weights`.
 
     ``gids`` selects a subset (a worker packs only the subgraphs it owns
     in the distributed runtime); default packs every subgraph.
 
-    ``lane`` is the z-alignment: the 128 default matches the lane tile
-    the Pallas kernels (bf_relax/ktrop) block on, so slabs drop into the
-    kernels directly.  Consumers that stay on the jnp solvers (the dense
-    worker's grouped refine) pass a small lane — relaxation compute is
-    O(z²) per problem, so padding 20-vertex subgraphs to z=128 costs
-    ~40x the useful work.
+    Geometry comes from ``layout`` (a
+    :class:`repro.engine.layout.SlabLayout` — the distributed worker
+    passes its engine backend's) when given; otherwise from ``lane``,
+    the bare z-alignment.  The 128 default matches the lane tile the
+    Pallas kernels (bf_relax/ktrop) block on, so slabs drop into the
+    kernels directly; the jnp solvers want a tight lane (8) instead —
+    relaxation compute is O(z²) per problem, so padding 20-vertex
+    subgraphs to z=128 costs ~40x the useful work.
     """
     subs = partition.subgraphs
     if gids is not None:
@@ -68,7 +70,10 @@ def pack_subgraphs(
     z = max(sg.nv for sg in subs)
     if z_pad is not None:
         z = max(z, z_pad)
-    z = int(lane * ((z + lane - 1) // lane))
+    if layout is not None:
+        z = layout.align_z(z)
+    else:
+        z = int(lane * ((z + lane - 1) // lane))
     S = len(subs)
     adj = np.full((S, z, z), float(INF), dtype=np.float32)
     nv = np.zeros(S, dtype=np.int32)

@@ -1,0 +1,121 @@
+"""Slab geometry in one place: every layout decision a solver backend
+imposes on the [S, J, z] grouped-solve data plane.
+
+Before this module, layout knowledge was scattered as constants across
+four layers: ``pack_subgraphs`` hard-coded its lane default, the dense
+worker overrode it with ``lane=8``, ``dist.grouped_yen`` owned the
+hot-row ``_bucket_shape`` packing, and the Pallas kernels asserted their
+own ``z % 128`` alignment.  The jnp and Pallas solvers genuinely want
+*different* geometry — jnp relaxation compute is O(z²) per problem so a
+tight lane (8) minimizes padded work, while the Pallas kernels block on
+the TPU lane tile (z % 128 == 0) and the f32 sublane tile (J % 8 == 0)
+with a VMEM-bounded J — so geometry must be a *backend property*, not a
+constant.  A :class:`SlabLayout` packages it:
+
+* ``lane`` — z-alignment of packed ``[S, z, z]`` slabs;
+* ``j_align``/``j_max`` — alignment and VMEM bound of the J (problems
+  per slab row) axis of a grouped solve bucket;
+* ``bucket_shape`` — the hot-row packing rule: pick the [S_pad, J_pad]
+  bucket minimizing padded area, splitting rows with more jobs than
+  J_pad across duplicate slab rows.
+
+``repro.engine.backend.SolverBackend`` carries one; everything else
+(cluster slab packing, the grouped-Yen round packer) reads geometry from
+the backend's layout instead of hard-coding it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["SlabLayout", "JNP_LAYOUT", "PALLAS_LAYOUT"]
+
+
+def _pow2(n: int) -> int:
+    n = int(n)
+    return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabLayout:
+    """Geometry one solver backend imposes on packed slabs and buckets.
+
+    ``lane``     z-alignment: packed slabs round z up to a multiple.
+    ``j_align``  J-alignment of grouped-solve buckets (1 = none; the
+                 Pallas kernels want the f32 sublane tile, 8).
+    ``j_max``    upper bound on J per bucket (None = unbounded): rows
+                 with more jobs split across duplicate slab rows, which
+                 keeps the per-grid-step VMEM working set bounded.
+    """
+
+    name: str
+    lane: int = 8
+    j_align: int = 1
+    j_max: int | None = None
+
+    def __post_init__(self):
+        if self.lane < 1 or self.j_align < 1:
+            raise ValueError("lane and j_align must be ≥ 1")
+        if self.j_max is not None and self.j_max % self.j_align:
+            raise ValueError(
+                f"j_max {self.j_max} must be a multiple of "
+                f"j_align {self.j_align}"
+            )
+
+    def align_z(self, z: int) -> int:
+        """Round a vertex count up to this layout's lane tile."""
+        return int(self.lane * ((int(z) + self.lane - 1) // self.lane))
+
+    def align_j(self, j: int) -> int:
+        """Round a problem count up to this layout's J alignment."""
+        a = self.j_align
+        return int(a * ((int(j) + a - 1) // a))
+
+    def bucket_shape(self, per_row_counts, s_multiple: int = 1):
+        """Pick the [S_pad, J_pad] bucket minimizing padded area.
+
+        A row with more jobs than ``J_pad`` is split across duplicate
+        slab rows, so the padded problem count is Σ ceil(n_r / J) · J
+        instead of n_rows · max(n_r) — without the split, one hot
+        subgraph (the common case when many concurrent queries cross
+        the same boundary region) inflates EVERY row to its
+        pow2-rounded max and the merged batch costs more compute than
+        the per-query solves it replaced.  Candidates stay pow2
+        multiples of ``j_align`` capped at ``j_max``, and S a pow2
+        multiple of ``s_multiple``, so shapes reuse jit buckets.
+        """
+        per_row_counts = [int(n) for n in per_row_counts]
+        if not per_row_counts:
+            raise ValueError("bucket_shape needs at least one row count")
+        j_hi = self.align_j(_pow2(max(per_row_counts)))
+        if self.j_max is not None:
+            j_hi = min(j_hi, self.j_max)
+        j_hi = max(j_hi, self.j_align)
+        best = None
+        j = self.j_align
+        while j <= j_hi:
+            s_need = sum(-(-n // j) for n in per_row_counts)
+            s_pad = _pow2(s_need)
+            if s_pad % s_multiple:
+                s_pad = -(-s_pad // s_multiple) * s_multiple
+            # padded relax compute ∝ S·J; the +1 term charges the
+            # [S, z, z] adjacency duplication/transfer that row-splitting
+            # adds
+            cost = s_pad * (j + 1)
+            if best is None or cost < best[0]:
+                best = (cost, s_pad, j)
+            j *= 2
+        _, s_pad, j_pad = best
+        return s_pad, j_pad
+
+
+# The jnp grouped solvers want tight slabs: relaxation compute is O(z²)
+# per problem, so padding 20-vertex subgraphs to z=128 costs ~40x the
+# useful work.  J buckets are free-form pow2.
+JNP_LAYOUT = SlabLayout(name="jnp-tight", lane=8)
+
+# The Pallas kernels (kernels/bf_relax, ktrop) block on the TPU lane
+# tile (z % 128) and the f32 sublane tile (J % 8); J ≤ 32 keeps the
+# per-grid-step [J, UZ, TV] intermediate inside the v5e VMEM plan.
+PALLAS_LAYOUT = SlabLayout(name="pallas-vmem", lane=128, j_align=8,
+                           j_max=32)

@@ -4,12 +4,15 @@ The serving stack used to thread ``"pyen"``/``"dense_bf"`` string
 switches through ``dist.cluster``, ``dist.scheduler`` and
 ``launch.serve``; every new engine meant touching all three.  An
 :class:`EngineSpec` instead packages everything a ``dist.cluster.Worker``
-needs to run one engine — whether it packs a dense slab, which lane
-alignment that slab uses, how to solve a batch of cache-miss refine
-tasks, and how to build a device-mesh solver — and the registry maps
-names to specs.  ``repro.service`` re-exports this module as the public
-way to plug in an engine; the builtin specs reproduce the two original
-engines exactly.
+needs to run one engine — whether it packs a dense slab, the
+:class:`~repro.engine.backend.SolverBackend` that executes (and whose
+:class:`~repro.engine.layout.SlabLayout` owns all slab geometry: lane
+alignment, J buckets, hot-row packing), how to solve a batch of
+cache-miss refine tasks, and how to build a device-mesh solver — and
+the registry maps names to specs.  ``repro.service`` re-exports this
+module as the public way to plug in an engine; the builtin specs are
+``pyen`` (host Yen), ``dense_bf`` (jnp grouped BF) and ``pallas_bf``
+(the fused Pallas kernel, interpret-mode on non-TPU hosts).
 
 A spec's ``refine(worker, misses, k)`` receives the worker (slab,
 row_of, dtlp access) and the cache-miss task list ``[(gid, a, b)]`` with
@@ -23,6 +26,9 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Callable
+
+from .backend import JnpBackend, PallasBackend, SolverBackend
+from .layout import JNP_LAYOUT, SlabLayout
 
 __all__ = [
     "EngineSpec",
@@ -38,8 +44,9 @@ class EngineSpec:
 
     ``refine(worker, misses, k) -> {(gid, a, b): [(d, path)]}`` solves a
     batch of partial-KSP tasks; ``packs_slab`` makes each worker pack its
-    owned subgraphs into a dense ``[S, z, z]`` slab at init (``lane``
-    alignment); ``make_mesh_solver(mesh, mesh_axis) -> (solver,
+    owned subgraphs into a dense ``[S, z, z]`` slab at init, with all
+    geometry (lane alignment, bucket shapes) coming from ``backend
+    .layout``; ``make_mesh_solver(mesh, mesh_axis) -> (solver,
     s_multiple)`` is optional device-mesh wiring (None = the engine has
     no mesh path).
     """
@@ -47,9 +54,19 @@ class EngineSpec:
     name: str
     refine: Callable
     packs_slab: bool = False
-    lane: int = 8
+    backend: SolverBackend | None = None
     make_mesh_solver: Callable | None = None
     description: str = ""
+
+    @property
+    def layout(self) -> SlabLayout:
+        """The slab geometry this engine's workers pack and solve in."""
+        return self.backend.layout if self.backend is not None else JNP_LAYOUT
+
+    @property
+    def lane(self) -> int:
+        """z-alignment of packed slabs (compat alias for layout.lane)."""
+        return self.layout.lane
 
     @property
     def supports_mesh(self) -> bool:
@@ -84,7 +101,7 @@ def available_engines() -> list[str]:
 
 
 # ---------------------------------------------------------------------------
-# builtin engines — behavior-identical to the former string switches
+# builtin engines
 # ---------------------------------------------------------------------------
 def _pyen_refine(worker, misses, k):
     """Host Yen per pair on the live subgraph view (QueryBolt-side)."""
@@ -106,8 +123,10 @@ def _pyen_refine(worker, misses, k):
     return out
 
 
-def _dense_bf_refine(worker, misses, k):
-    """All misses through ONE grouped [S, J, z] lockstep-Yen slab solve."""
+def _grouped_refine(worker, misses, k):
+    """All misses through ONE grouped [S, J, z] lockstep-Yen slab solve,
+    executed by the spec's :class:`SolverBackend` (jnp or Pallas) — or by
+    the worker's mesh solver override when one is wired."""
     from repro.dist.grouped_yen import grouped_ksp
 
     dtlp = worker.dtlp
@@ -119,6 +138,7 @@ def _dense_bf_refine(worker, misses, k):
     results = grouped_ksp(
         worker.slab.adj, gk_tasks, k,
         solver=worker.solver, s_multiple=worker.s_multiple,
+        backend=worker.spec.backend,
     )
     out = {}
     for (gid, a, b), local in zip(misses, results):
@@ -149,13 +169,25 @@ register_engine(EngineSpec(
     description="host core.yen per pair through the shared PartialKSPCache",
 ))
 
-# lane=8: the worker dispatches the jnp grouped solvers, so a tight z
-# beats 128-lane Pallas alignment (relaxation compute is O(z²)/problem)
+# JnpBackend layout packs at lane=8: the jnp grouped solvers want a
+# tight z (relaxation compute is O(z²)/problem)
 register_engine(EngineSpec(
     name="dense_bf",
-    refine=_dense_bf_refine,
+    refine=_grouped_refine,
     packs_slab=True,
-    lane=8,
+    backend=JnpBackend(),
     make_mesh_solver=_dense_bf_mesh_solver,
     description="grouped [S, J, z] dense Bellman–Ford over per-worker slabs",
+))
+
+# PallasBackend layout packs at lane=128 with sublane-aligned,
+# VMEM-bounded J buckets; on non-TPU hosts the kernel runs interpret=True
+# and produces byte-identical paths to dense_bf
+register_engine(EngineSpec(
+    name="pallas_bf",
+    refine=_grouped_refine,
+    packs_slab=True,
+    backend=PallasBackend(),
+    description="fused Pallas bf_relax fixed point over 128-lane slabs "
+                "(interpret-mode fallback off-TPU)",
 ))

@@ -62,24 +62,44 @@ def _bf_relax_kernel(dist_ref, adj_ref, spur_ref, ban_ref, cap_ref, out_ref):
     out_ref[0] = new
 
 
+_SUB = 8    # f32 sublane tile (J alignment)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bf_relax(dist, adj, spur_onehot, banned_next, cap, *, interpret=False):
     """dist [S,J,z] f32, adj [S,z,z] f32, spur_onehot/banned_next [S,J,z]
-    f32 0/1 masks, cap [S,J] f32 → relaxed dist [S,J,z]."""
+    f32 0/1 masks, cap [S,J] f32 → relaxed dist [S,J,z].
+
+    z and J need not be tile-aligned: the wrapper pads z up to the lane
+    tile (INF-filled adj columns/rows and dist lanes — padded vertices
+    are unreachable and never win a min) and J up to the f32 sublane
+    tile (all-INF dist rows no-op through the relaxation), then slices
+    the result back, so tight-lane jnp slabs drop in without repacking.
+    """
     S, J, z = dist.shape
-    assert z % _TV == 0, f"z must be a multiple of {_TV}"
-    grid = (S, z // _TV)
-    return pl.pallas_call(
+    z_pad = _TV * ((z + _TV - 1) // _TV)
+    j_pad = _SUB * ((J + _SUB - 1) // _SUB)
+    if z_pad != z or j_pad != J:
+        dz, dj = z_pad - z, j_pad - J
+        dist = jnp.pad(dist, ((0, 0), (0, dj), (0, dz)),
+                       constant_values=INF)
+        adj = jnp.pad(adj, ((0, 0), (0, dz), (0, dz)), constant_values=INF)
+        spur_onehot = jnp.pad(spur_onehot, ((0, 0), (0, dj), (0, dz)))
+        banned_next = jnp.pad(banned_next, ((0, 0), (0, dj), (0, dz)))
+        cap = jnp.pad(cap, ((0, 0), (0, dj)), constant_values=INF)
+    grid = (S, z_pad // _TV)
+    out = pl.pallas_call(
         _bf_relax_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, J, z), lambda s, t: (s, 0, 0)),
-            pl.BlockSpec((1, z, _TV), lambda s, t: (s, 0, t)),
-            pl.BlockSpec((1, J, z), lambda s, t: (s, 0, 0)),
-            pl.BlockSpec((1, J, _TV), lambda s, t: (s, 0, t)),
-            pl.BlockSpec((1, J), lambda s, t: (s, 0)),
+            pl.BlockSpec((1, j_pad, z_pad), lambda s, t: (s, 0, 0)),
+            pl.BlockSpec((1, z_pad, _TV), lambda s, t: (s, 0, t)),
+            pl.BlockSpec((1, j_pad, z_pad), lambda s, t: (s, 0, 0)),
+            pl.BlockSpec((1, j_pad, _TV), lambda s, t: (s, 0, t)),
+            pl.BlockSpec((1, j_pad), lambda s, t: (s, 0)),
         ],
-        out_specs=pl.BlockSpec((1, J, _TV), lambda s, t: (s, 0, t)),
-        out_shape=jax.ShapeDtypeStruct((S, J, z), jnp.float32),
+        out_specs=pl.BlockSpec((1, j_pad, _TV), lambda s, t: (s, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((S, j_pad, z_pad), jnp.float32),
         interpret=interpret,
     )(dist, adj, spur_onehot, banned_next, cap)
+    return out[:, :J, :z]

@@ -45,7 +45,12 @@ def main():
     ap.add_argument("--revive", action="store_true",
                     help="revive the killed worker one epoch later "
                     "(its replica re-syncs the missed batch before serving)")
-    ap.add_argument("--engine", choices=available_engines(), default="pyen")
+    ap.add_argument(
+        "--engine", choices=available_engines(), default="pyen",
+        help="refine engine spec: pyen (host Yen), dense_bf (jnp grouped "
+        "BF), pallas_bf (fused Pallas kernel; interpret-mode off-TPU — "
+        "identical answers to dense_bf)",
+    )
     ap.add_argument(
         "--mesh", action="store_true",
         help="route the dense refine through jax.shard_map over the device "

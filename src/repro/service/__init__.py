@@ -4,7 +4,10 @@ Public surface of the serving stack: :class:`KSPService` (submit/poll/
 drain over the cross-query lockstep scheduler, epoch-versioned queries
 and updates, SLO admission), the request/response dataclasses, and the
 :class:`~repro.engine.registry.EngineSpec` registry for pluggable refine
-engines.  Everything underneath — ``dist.cluster.Cluster.query``,
+engines — each spec carrying a
+:class:`~repro.engine.backend.SolverBackend` (jnp or Pallas) whose
+:class:`~repro.engine.layout.SlabLayout` owns all slab geometry.
+Everything underneath — ``dist.cluster.Cluster.query``,
 ``dist.scheduler.QueryScheduler`` — is an internal.
 
     from repro.service import KSPService, QueryRequest, ServiceConfig
@@ -14,6 +17,12 @@ engines.  Everything underneath — ``dist.cluster.Cluster.query``,
     res = svc.query(s, t, k=3)       # res.paths, res.epoch, res.stats
 """
 
+from repro.engine.backend import (  # noqa: F401
+    JnpBackend,
+    PallasBackend,
+    SolverBackend,
+)
+from repro.engine.layout import SlabLayout  # noqa: F401
 from repro.engine.registry import (  # noqa: F401
     EngineSpec,
     available_engines,
@@ -51,4 +60,8 @@ __all__ = [
     "register_engine",
     "get_engine",
     "available_engines",
+    "SolverBackend",
+    "JnpBackend",
+    "PallasBackend",
+    "SlabLayout",
 ]

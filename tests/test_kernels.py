@@ -87,6 +87,62 @@ class TestBFRelax:
             d = new
         np.testing.assert_allclose(np.asarray(d), np.asarray(want), rtol=1e-6)
 
+    @pytest.mark.parametrize("seed,z", [(0, 24), (1, 100), (2, 130)])
+    def test_tight_lane_z_pads_internally(self, seed, z):
+        """The wrapper pads non-128-multiple z (and sub-sublane J) to the
+        tile internally instead of asserting — tight-lane jnp slabs drop
+        straight into the kernel.  Exact agreement with the oracle."""
+        rng = np.random.default_rng(seed)
+        S, J = 2, 3
+        adj, dist = rand_slab(rng, S, J, z)
+        spur = (rng.random((S, J, z)) < 0.05).astype(np.float32)
+        ban = (rng.random((S, J, z)) < 0.1).astype(np.float32)
+        cap = rng.uniform(20, 80, (S, J)).astype(np.float32)
+        got = np.asarray(ops.bf_relax_step(
+            jnp.asarray(dist), jnp.asarray(adj), jnp.asarray(spur),
+            jnp.asarray(ban), jnp.asarray(cap),
+        ))
+        assert got.shape == (S, J, z)
+        want = np.asarray(ref.bf_relax_ref(
+            jnp.asarray(dist), jnp.asarray(adj),
+            jnp.asarray(spur) > 0.5, jnp.asarray(ban) > 0.5,
+            jnp.asarray(cap),
+        ))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("seed", [0, 3, 11])
+    def test_matches_dense_bf_step(self, seed):
+        """bf_relax(interpret=True) vs the flat engine.dense.bf_step
+        reference on masked slabs: spur cuts, banned-next, cap clamping
+        and all-INF padded rows — bitwise agreement per problem."""
+        from repro.engine import dense as E
+
+        rng = np.random.default_rng(seed)
+        S, J, z = 2, 4, 128
+        adj, dist = rand_slab(rng, S, J, z)
+        so = np.zeros((S, J, z), bool)
+        for s in range(S):
+            for j in range(J - 1):  # last row spur-less
+                so[s, j, rng.integers(z)] = True
+        bn = rng.random((S, J, z)) < 0.1
+        cap = rng.uniform(20, 80, (S, J)).astype(np.float32)
+        dist[:, J - 1, :] = _INF  # padded problem row: must no-op
+        got = np.asarray(ops.bf_relax_step(
+            jnp.asarray(dist), jnp.asarray(adj),
+            jnp.asarray(so.astype(np.float32)),
+            jnp.asarray(bn.astype(np.float32)), jnp.asarray(cap),
+        ))
+        # flat reference: problem (s, j) against adj[s], then cap clamp
+        flat = np.asarray(E.bf_step(
+            jnp.asarray(dist.reshape(S * J, z)),
+            jnp.asarray(np.repeat(adj, J, axis=0)),
+            jnp.asarray(so.reshape(S * J, z)),
+            jnp.asarray(bn.reshape(S * J, z)),
+        )).reshape(S, J, z)
+        want = np.where(flat > cap[:, :, None], _INF, flat)
+        np.testing.assert_array_equal(got, want)
+        assert np.all(got[:, J - 1, :] == np.float32(_INF))
+
 
 class TestKtrop:
     @settings(max_examples=6, deadline=None)
@@ -122,6 +178,29 @@ class TestKtrop:
         D2k = np.where(D2k > _INF / 2, np.inf, D2k)
         np.testing.assert_allclose(D2k, D2r, rtol=1e-5)
 
+    @pytest.mark.parametrize("seed,k", [(0, 2), (4, 4)])
+    def test_kernel_matches_engine_ktrop_step(self, seed, k):
+        """kernels.ktrop.ktrop_relax (interpret) vs the engine's jnp
+        reference ``engine.dense.ktrop_step`` — the solver the serving
+        stack actually iterates, not just the kernels/ref oracle."""
+        from repro.engine import dense as E
+        from repro.kernels.ktrop import ktrop_relax
+
+        rng = np.random.default_rng(seed)
+        adj, _ = rand_slab(rng, 2, 1, 128)
+        D = np.full((2, k, 128), _INF, np.float32)
+        D[0, 0, rng.integers(128)] = 0.0
+        D[1, 0, rng.integers(128)] = 0.0
+        got = np.asarray(ktrop_relax(
+            jnp.asarray(D), jnp.asarray(adj), interpret=True
+        ))
+        want = np.asarray(E.ktrop_step(
+            jnp.asarray(D), jnp.asarray(adj), distinct=True
+        ))
+        got = np.where(got > _INF / 2, np.inf, got)
+        want = np.where(want > _INF / 2, np.inf, want)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
 
 class TestBoundDist:
     @settings(max_examples=8, deadline=None)
@@ -148,6 +227,44 @@ class TestBoundDist:
             jnp.asarray(sub_full), jnp.asarray(phi),
         ))
         np.testing.assert_allclose(got, want, rtol=2e-5)
+
+    @pytest.mark.parametrize("seed", [0, 6])
+    def test_kernel_matches_engine_bound_dist_batch(self, seed):
+        """kernels.bound_dist (interpret) vs the engine's jnp reference
+        ``engine.dense.bound_dist_batch`` (which sorts internally) on a
+        shared unsorted unit-weight profile."""
+        from repro.engine import dense as E
+        from repro.kernels.bound_dist import bound_dist
+
+        rng = np.random.default_rng(seed)
+        S, En, B = 3, 64, 256
+        unit_w = rng.uniform(0.1, 5.0, (S, En)).astype(np.float32)
+        unit_n = rng.integers(1, 9, (S, En)).astype(np.float32)
+        sub_blocked = rng.integers(0, S, B // 256).astype(np.int32)
+        sub_full = np.repeat(sub_blocked, 256)
+        # φ stays within every subgraph's total fragment count: past it
+        # the kernel's clip-sum saturates at BD(total) while the
+        # searchsorted reference extrapolates — both out-of-contract
+        phi = rng.uniform(0, float(unit_n.sum(-1).min()), B).astype(
+            np.float32)
+        order = np.argsort(unit_w, axis=-1)
+        ws = np.take_along_axis(unit_w, order, axis=-1)
+        ns = np.take_along_axis(unit_n, order, axis=-1)
+        cb = np.concatenate(
+            [np.zeros((S, 1), np.float32), np.cumsum(ns, -1)[:, :-1]], -1
+        )
+        got = np.asarray(bound_dist(
+            jnp.asarray(ws), jnp.asarray(ns), jnp.asarray(cb),
+            jnp.asarray(sub_blocked), jnp.asarray(phi), interpret=True,
+        ))
+        want = np.asarray(E.bound_dist_batch(
+            jnp.asarray(unit_w), jnp.asarray(unit_n),
+            jnp.asarray(sub_full), jnp.asarray(phi),
+        ))
+        # the engine reference accumulates via f32 cumsum + searchsorted
+        # while the kernel does a direct clip-sum — rounding differs by
+        # algorithm, hence the slightly loose tolerance
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
 
     def test_matches_core_bound_distances(self):
         """Kernel BD == the paper-level reference (core.bounding)."""

@@ -177,10 +177,10 @@ class TestEmptyBatch:
         assert grouped_ksp(adj, [], 3) == []
 
     def test_solve_round_zero_jobs(self):
-        from repro.dist.grouped_yen import _solve_round
+        from repro.dist.grouped_yen import _DEFAULT_BACKEND, _solve_round
 
         adj = np.zeros((1, 2, 2), np.float32)
-        assert _solve_round(adj, [], None, 1) == []
+        assert _solve_round(adj, [], None, 1, _DEFAULT_BACKEND) == []
 
     def test_all_hit_tick_through_worker(self, net):
         """End to end: serving the same query twice back-to-back makes
