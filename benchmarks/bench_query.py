@@ -1,15 +1,30 @@
 """Paper Fig 16 + iteration figures: KSP-DG query time vs z / k / #queries
-/ ξ / τ, and iteration counts vs ξ / τ / k / α."""
+/ ξ / τ, and iteration counts vs ξ / τ / k / α — plus the reference-
+stream comparison rows (``--stream``).
+
+``--stream`` runs only the stream-comparison suite and doubles as the CI
+corridor-ties regression gate: it FAILS (exit 1) when
+
+* any query on the tie-dense corridor topology reports
+  ``QueryStats.truncated`` under the lazy stream (the failure mode the
+  Eppstein-style stream exists to remove), or
+* the lazy stream's answers diverge from the Yen stream's on a tie-free
+  (continuous-weight) grid — paths must be identical and distances equal
+  to 1e-9 (the same path joined via different reference partitions can
+  differ in the last float bits).
+"""
 
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
 
 from repro.core.dtlp import DTLP
+from repro.core.graph import Graph
 from repro.core.kspdg import ksp_dg
-from repro.data.roadnet import WeightUpdateStream
+from repro.data.roadnet import WeightUpdateStream, corridor_tie_network
 
 from .common import build_network, emit, rand_queries
 
@@ -100,12 +115,110 @@ def bench_iterations_vs_k_alpha(quick=True):
     return emit("iterations", rows)
 
 
-def main(quick=True):
-    bench_query_vs_z_k(quick)
-    bench_query_scalability(quick)
-    bench_query_vs_xi_tau(quick)
-    bench_iterations_vs_k_alpha(quick)
+def _stream_pass(d, queries, k, stream, max_iterations=10_000):
+    """Serve ``queries`` under one reference stream; aggregate stats."""
+    t0 = time.perf_counter()
+    results, iters, refs, skipped, truncated = [], 0, 0, 0, 0
+    for s, t in queries:
+        res, st = ksp_dg(d, s, t, k, ref_stream=stream,
+                         max_iterations=max_iterations, return_stats=True)
+        results.append(res)
+        iters += st.iterations
+        refs += st.references
+        skipped += st.walks_skipped
+        truncated += int(st.truncated)
+    total = time.perf_counter() - t0
+    n = max(1, len(queries))
+    return results, dict(
+        stream=stream, k=k, n_queries=len(queries),
+        ms_per_query=round(total / n * 1e3, 2),
+        avg_iterations=round(iters / n, 2),
+        avg_references=round(refs / n, 2),
+        avg_walks_skipped=round(skipped / n, 2),
+        truncated=truncated,
+    )
+
+
+def bench_stream_comparison(quick=True, smoke=False):
+    """Lazy vs Yen reference streams: ordinary grid + corridor ties.
+
+    Returns the gate failures (empty = pass); rows land in
+    ``results/bench_query_streams.json``.
+    """
+    failures = []
+    rows = []
+
+    # --- tie-free grid: identical answers, stream time comparison ------
+    g, z = build_network("NY-s", quick)
+    rng = np.random.default_rng(9)
+    g = Graph(g.n, g.edge_u, g.edge_v, rng.uniform(1.0, 20.0, g.m))
+    d = DTLP.build(g, z=z, xi=6)
+    qs = rand_queries(g, 8 if (quick or smoke) else 40, seed=11)
+    per_stream = {}
+    for stream in ("yen", "lazy"):
+        results, row = _stream_pass(d, qs, 4, stream)
+        per_stream[stream] = results
+        rows.append(dict(fig="stream-grid", **row))
+    for i, (ry, rl) in enumerate(zip(per_stream["yen"], per_stream["lazy"])):
+        same = len(ry) == len(rl) and all(
+            py == pl and abs(float(dy) - float(dl)) <= 1e-9
+            for (dy, py), (dl, pl) in zip(ry, rl)
+        )
+        if not same:
+            failures.append(
+                f"tie-free grid query {qs[i]}: lazy diverges from yen\n"
+                f"  yen : {ry}\n  lazy: {rl}"
+            )
+
+    # --- corridor ties: the truncation regression gate -----------------
+    width, length = 4, 10
+    gc = corridor_tie_network(width, length)
+    dc = DTLP.build(gc, z=12, xi=2)
+    # both lattice diagonals (corner hub pairs)
+    corner = [(0, width * length - 1), (length - 1, (width - 1) * length)]
+    for stream in ("yen", "lazy"):
+        results, row = _stream_pass(dc, corner, 3, stream,
+                                    max_iterations=400)
+        rows.append(dict(fig="stream-corridor", **row))
+        if stream == "lazy" and row["truncated"]:
+            failures.append(
+                f"corridor-tie topology: {row['truncated']} lazy-stream "
+                "queries truncated — the stall regressed"
+            )
+    emit("query_streams", rows)
+    return failures
+
+
+def main(quick=True, stream=False, smoke=False):
+    if not stream:
+        bench_query_vs_z_k(quick)
+        bench_query_scalability(quick)
+        bench_query_vs_xi_tau(quick)
+        bench_iterations_vs_k_alpha(quick)
+    failures = bench_stream_comparison(quick, smoke=smoke)
+    if failures:
+        for f in failures:
+            print(f"STREAM GATE FAILED: {f}", file=sys.stderr)
+        if stream:
+            # the gate aborts only the dedicated --stream (CI) run; a
+            # figure-regeneration run still reports, but exits 0 with
+            # its figures intact
+            raise SystemExit(1)
+    else:
+        print("stream gate OK: corridor ties complete untruncated under "
+              "the lazy stream; lazy == yen on the tie-free grid")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--stream", action="store_true",
+                    help="run only the reference-stream comparison "
+                    "(corridor-ties regression gate)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing; with --stream this is the gate the "
+                    "workflow runs")
+    a = ap.parse_args()
+    main(quick=not a.full, stream=a.stream, smoke=a.smoke)

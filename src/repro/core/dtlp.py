@@ -194,6 +194,10 @@ class DTLP:
         self.xi = xi
         self.lbd_mode = lbd_mode
         self.stats = stats
+        # lazy reference-stream state: per-target SidetrackTrees over the
+        # base skeleton (see ref_tree_cache below)
+        self._ref_trees = None
+        self._ref_trees_key: tuple | None = None
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -280,6 +284,25 @@ class DTLP:
     def subgraphs_of_pair(self, u: int, v: int) -> list:
         return self.partition.subgraphs_of_pair(u, v)
 
+    def ref_tree_cache(self):
+        """Per-skeleton-state cache of lazy reference-stream sidetrack
+        trees (bounded LRU ``refstream.TreeCache``), keyed by target
+        skeleton vertex.
+
+        The "lazy" stream (``core.refstream``) builds one reverse SPT +
+        sidetrack heap per target and reuses it across every query to
+        that target; the structure is only valid for one skeleton weight
+        state, so the cache self-invalidates whenever the skeleton's
+        weights are refreshed (``apply_updates``) or the skeleton is
+        rebuilt outright (``rebaseline``)."""
+        from .refstream import TreeCache
+
+        key = (id(self.skeleton), self.skeleton._version)
+        if self._ref_trees is None or self._ref_trees_key != key:
+            self._ref_trees = TreeCache()
+            self._ref_trees_key = key
+        return self._ref_trees
+
     # --------------------------------------------------- drift / rebaseline
     def drift(self) -> float:
         """Mean |w/w0 − 1|: how far weights have drifted from the vfrag
@@ -291,8 +314,15 @@ class DTLP:
         """Re-anchor vfrags at the CURRENT weights and rebuild the level-1
         index + skeleton on the existing partition (beyond-paper
         production feature: restores tight bounds after heavy drift;
-        cost ≈ initial build minus partitioning).  Returns seconds."""
+        cost ≈ initial build minus partitioning).  Returns seconds.
+
+        Lazy reference streams recover by rebuilding their per-target
+        SPT + sidetrack heap against the fresh skeleton (one Dijkstra +
+        O(m log n) heap inserts, NOT a re-run of Yen rounds): the
+        ``ref_tree_cache`` is dropped here and repopulates on demand."""
         t0 = time.perf_counter()
+        self._ref_trees = None
+        self._ref_trees_key = None
         g = self.graph
         g.w0 = g.w.copy()
         g.vfrag = np.maximum(1, np.rint(g.w0)).astype(np.int64)

@@ -23,8 +23,9 @@ from collections import OrderedDict
 import numpy as np
 
 from .dtlp import DTLP
+from .refstream import TIE_EPS, get_ref_stream
 from .sssp import CSRView, dijkstra, subgraph_view
-from .yen import ksp, ksp_stream
+from .yen import ksp
 
 INF = float("inf")
 
@@ -32,13 +33,18 @@ INF = float("inf")
 @dataclasses.dataclass
 class QueryStats:
     iterations: int = 0
+    references: int = 0  # reference paths consumed (≥ iterations: a
+    # tie-batched cohort folds many equal-weight references into one)
+    walks_skipped: int = 0  # non-simple lazy-stream walks consumed for
+    # the stop rule but never refined (they cannot join simply)
     refine_tasks: int = 0
     cache_hits: int = 0
     partial_paths: int = 0
     # True when the iteration guard fired before Theorem 3's stopping
     # rule: the result is best-effort, not provably exact.  Happens on
     # geodesic corridors dense with boundary vertices, where the skeleton
-    # stream enumerates combinatorially many tied-weight reference paths.
+    # Yen stream enumerates combinatorially many tied-weight reference
+    # paths — the "lazy" reference stream exists to remove this mode.
     truncated: bool = False
 
 
@@ -297,46 +303,103 @@ def ksp_dg_stepper(
     k: int,
     *,
     max_iterations: int = 10_000,
+    ref_stream=None,
+    tie_batch: int | None = None,
 ):
     """Resumable KSP-DG (Algorithm 1): one generator step per iteration.
 
-    Yields a :class:`RefineRequest` for each filter-phase reference path
-    and expects the matching segment lists back through ``send``; the
-    generator's return value (``StopIteration.value``) is ``(L, stats)``.
-    This inversion-of-control form lets a scheduler interleave many
-    queries' iterations in lockstep and merge their refine tasks into
-    shared grouped solves (``repro.dist.scheduler``); ``ksp_dg`` below is
-    the single-query driver over the same machinery.
+    Yields a :class:`RefineRequest` for each filter-phase reference
+    cohort and expects the matching segment lists back through ``send``;
+    the generator's return value (``StopIteration.value``) is ``(L,
+    stats)``.  This inversion-of-control form lets a scheduler interleave
+    many queries' iterations in lockstep and merge their refine tasks
+    into shared grouped solves (``repro.dist.scheduler``); ``ksp_dg``
+    below is the single-query driver over the same machinery.
+
+    ``ref_stream`` names a :class:`repro.core.refstream
+    .ReferenceStreamSpec` ("yen" — the default — or "lazy", the
+    Eppstein-style deviation-walk stream).  One iteration consumes a
+    *cohort* of up to ``tie_batch`` references tied at the same weight
+    (default: the stream spec's own ``tie_batch``); the cohort's refine
+    pairs are de-duplicated into a single :class:`RefineRequest` and the
+    join runs per reference, so a tied weight level that would cost the
+    Yen stream thousands of iterations costs the lazy stream a handful.
+    The stop rule is unchanged — cohorts only batch references the rule
+    would have had to consume anyway, and every cohort member's weight
+    ties the first member's, so no reference past the stopping weight is
+    ever refined "extra".
     """
+    spec = get_ref_stream(ref_stream)
+    batch = spec.tie_batch if tie_batch is None else max(1, int(tie_batch))
     stats = QueryStats()
     if s == t:
         return [(0.0, (s,))], stats
     view, ext_id, global_of_ext, home = _extended_skeleton(dtlp, s, t)
     es, et = ext_id(s), ext_id(t)
-    # findksp mode: one reverse SPT guides every spur search as an A*
-    # heuristic — same exact stream as yen mode, ~7x fewer heap pops on
-    # road-like skeletons (the reference stream dominates query tails)
-    refs = ksp_stream(view, es, et, None, mode="findksp", directed=dtlp.graph.directed)
+    # per-target sidetrack trees are reusable across queries only on the
+    # un-spliced base skeleton (no home ⇒ no per-query extra vertices)
+    tree_cache = dtlp.ref_tree_cache() if not home else None
+    refs = spec.factory(view, es, et, dtlp.graph.directed,
+                        tree_cache=tree_cache)
 
     L: list[tuple[float, tuple]] = []
     L_set = set()
+    # two budgets: ``max_iterations`` bounds REFINE rounds (the expensive
+    # distributed work — exactly the pre-stream meaning for the Yen
+    # stream, whose references are all simple and all refined), while the
+    # reference budget bounds raw stream consumption so a lazy stream
+    # cannot spin forever skipping non-simple walks between refines
+    ref_budget = max_iterations * batch
     pending = next(refs, None)
-    while pending is not None and stats.iterations < max_iterations:
-        ref_d, ref_path_ext = pending
-        stats.iterations += 1
-        ref_path = [global_of_ext[v] for v in ref_path_ext]
-        pairs = list(zip(ref_path, ref_path[1:]))
-        seg_lists = yield RefineRequest(pairs=pairs, home=home, k=k, stats=stats)
-        for d, p in _k_best_joins(seg_lists, k):
-            if p not in L_set:
-                L_set.add(p)
-                L.append((d, p))
-        L.sort(key=lambda x: (x[0], x[1]))
-        for d_, p_ in L[k:]:
-            L_set.discard(p_)
-        L = L[:k]
+    while (pending is not None and stats.iterations < max_iterations
+           and stats.references < ref_budget):
+        cohort = [pending]
         pending = next(refs, None)
-        if pending is not None and len(L) >= k and L[k - 1][0] <= pending[0] + 1e-9:
+        while (pending is not None and len(cohort) < batch
+               and stats.references + len(cohort) < ref_budget
+               and pending[0] <= cohort[0][0] + TIE_EPS):
+            cohort.append(pending)
+            pending = next(refs, None)
+        stats.references += len(cohort)
+        # ordered de-dup of the cohort's refine pairs: tied references on
+        # a corridor mostly cross the same boundary pairs, so the request
+        # (and the grouped solve behind it) stays small.  Non-simple
+        # references (lazy-stream walks revisiting a vertex) are consumed
+        # for the stop rule but never refined: every join of a walk
+        # contains the walk's full vertex sequence, so the repeated
+        # vertex makes every candidate non-simple — refining one is pure
+        # waste.
+        pair_index: dict = {}
+        pairs: list[tuple] = []
+        ref_pairs: list[list[int]] = []
+        for _, ref_path_ext in cohort:
+            ref_path = [global_of_ext[v] for v in ref_path_ext]
+            if len(set(ref_path)) != len(ref_path):
+                stats.walks_skipped += 1
+                continue
+            idxs = []
+            for a, b in zip(ref_path, ref_path[1:]):
+                j = pair_index.get((a, b))
+                if j is None:
+                    j = len(pairs)
+                    pair_index[(a, b)] = j
+                    pairs.append((a, b))
+                idxs.append(j)
+            ref_pairs.append(idxs)
+        if pairs:
+            stats.iterations += 1
+            seg_lists = yield RefineRequest(pairs=pairs, home=home, k=k,
+                                            stats=stats)
+            for idxs in ref_pairs:
+                for d, p in _k_best_joins([seg_lists[j] for j in idxs], k):
+                    if p not in L_set:
+                        L_set.add(p)
+                        L.append((d, p))
+            L.sort(key=lambda x: (x[0], x[1]))
+            for d_, p_ in L[k:]:
+                L_set.discard(p_)
+            L = L[:k]
+        if pending is not None and len(L) >= k and L[k - 1][0] <= pending[0] + TIE_EPS:
             break
     else:
         stats.truncated = pending is not None
@@ -354,6 +417,8 @@ def ksp_dg(
     max_iterations: int = 10_000,
     refine_fn=None,
     return_stats: bool = False,
+    ref_stream=None,
+    tie_batch: int | None = None,
 ):
     """KSP-DG (Algorithm 1).  Returns [(dist, path)] ascending, len ≤ k.
 
@@ -367,8 +432,11 @@ def ksp_dg(
 
     This is a thin driver over :func:`ksp_dg_stepper` — one ``send`` per
     iteration, with the refine computed synchronously in between.
+    ``ref_stream``/``tie_batch`` select and tune the reference-path
+    stream (see :mod:`repro.core.refstream`).
     """
-    stepper = ksp_dg_stepper(dtlp, s, t, k, max_iterations=max_iterations)
+    stepper = ksp_dg_stepper(dtlp, s, t, k, max_iterations=max_iterations,
+                             ref_stream=ref_stream, tie_batch=tie_batch)
     seg_lists = None
     while True:
         try:

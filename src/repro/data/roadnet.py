@@ -70,6 +70,64 @@ def grid_road_network(
     return _largest_component(g)
 
 
+def corridor_tie_network(
+    width: int = 4,
+    length: int = 10,
+    *,
+    w_corridor: float = 1.0,
+    w_spur: float = 0.45,
+    spurs: int = 1,
+    directed: bool = False,
+) -> Graph:
+    """A geodesic corridor that stalls the Yen reference stream.
+
+    Deterministic ``width × length`` lattice whose edges all weigh
+    ``w_corridor`` — so skeleton reference paths tie in combinatorially
+    large cohorts — with ``spurs`` dangling spur vertices per lattice
+    vertex attached at ``w_spur`` < ``w_corridor``.  The spurs carry no
+    routes, but their cheap unit weights dilute every subgraph's sorted
+    unit-weight profile, pulling the bound distances (and hence the
+    skeleton's lower-bound edge weights) strictly below the actual
+    corridor distances (``w_spur`` must sit below ``w_corridor/2`` for
+    even the shortest boundary pairs to go loose; build the DTLP with a
+    small ``xi`` — e.g. ``z=12, xi=2`` at the default size — or the
+    deeper bound levels re-tighten the pairs).  Theorem 3's stop rule
+    then has to climb through several *massively tied* reference weight
+    levels before it can fire: the Yen stream pays one deviation round
+    per tied reference and the ``max_iterations`` guard truncates, while
+    the lazy deviation-walk stream consumes whole tied cohorts per
+    iteration and completes (``tests/test_refstream.py`` and
+    ``bench_query --stream`` pin this split).
+    """
+    n_lattice = width * length
+    us, vs, ws = [], [], []
+    for r in range(width):
+        for c in range(length):
+            v = r * length + c
+            if c + 1 < length:
+                us.append(v)
+                vs.append(v + 1)
+                ws.append(w_corridor)
+            if r + 1 < width:
+                us.append(v)
+                vs.append(v + length)
+                ws.append(w_corridor)
+    nxt = n_lattice
+    for v in range(n_lattice):
+        for _ in range(max(0, int(spurs))):
+            us.append(v)
+            vs.append(nxt)
+            ws.append(w_spur)
+            nxt += 1
+    return Graph(
+        nxt,
+        np.array(us, dtype=np.int64),
+        np.array(vs, dtype=np.int64),
+        np.array(ws, dtype=np.float64),
+        directed=directed,
+    )
+
+
 def _largest_component(g: Graph) -> Graph:
     """Restrict to the largest (weakly) connected component."""
     import collections

@@ -346,7 +346,7 @@ class Cluster:
 
     # -------------------------------------------------------------- query
     def query(self, s: int, t: int, k: int, *, max_iterations: int = 10_000,
-              return_stats: bool = False):
+              return_stats: bool = False, ref_stream=None):
         """Exact KSP through the cluster: [(dist, path)], ascending.
 
         Internal sequential driver — the public serving surface is
@@ -356,11 +356,15 @@ class Cluster:
         ``max_iterations`` bounds one query's KSP-DG iterations (a tail
         latency guard); when it fires the result is best-effort and the
         stats carry ``truncated=True`` — pass ``return_stats`` to see.
+        ``ref_stream`` overrides the engine spec's reference stream
+        (default: ``spec.ref_stream``, "lazy" for builtin engines).
         """
         return ksp_dg(self.dtlp, int(s), int(t), int(k),
                       refine_fn=self._refine,
                       max_iterations=max_iterations,
-                      return_stats=return_stats)
+                      return_stats=return_stats,
+                      ref_stream=(self.spec.ref_stream
+                                  if ref_stream is None else ref_stream))
 
     def _refine(self, pairs, k, home):
         """One iteration's refine: group by subgraph, dispatch to owners."""

@@ -186,12 +186,22 @@ def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
         backend = _DEFAULT_BACKEND
     states = [_TaskState(row, src, dst) for row, src, dst in tasks]
 
-    # round 0: every task's P1 is a single unmasked solve
+    # round 0: every task's P1 is a single unmasked single-source solve,
+    # so tasks sharing (row, src) — common in tie-cohort reference
+    # batches, where one boundary vertex fans out to many partners on the
+    # same subgraph — share ONE solve and differ only in dst extraction
     z = adj.shape[-1]
-    jobs = [(st.row, st.src, np.zeros(z, bool), np.zeros(z, bool), _INF)
-            for st in states]
-    for st, (dist, parent) in zip(
-            states, _solve_round(adj, jobs, solver, s_multiple, backend)):
+    first_of: dict = {}
+    jobs = []
+    for st in states:
+        key = (st.row, st.src)
+        if key not in first_of:
+            first_of[key] = len(jobs)
+            jobs.append((st.row, st.src, np.zeros(z, bool),
+                         np.zeros(z, bool), _INF))
+    round0 = _solve_round(adj, jobs, solver, s_multiple, backend)
+    for st in states:
+        dist, parent = round0[first_of[(st.row, st.src)]]
         if dist[st.dst] >= _INF / 2:
             st.done = True
             continue

@@ -148,11 +148,16 @@ class QueryScheduler:
     """
 
     def __init__(self, cluster: Cluster, *, max_in_flight: int = 8,
-                 max_queue: int | None = None, max_iterations: int = 10_000):
+                 max_queue: int | None = None, max_iterations: int = 10_000,
+                 ref_stream=None):
         self.cluster = cluster
         self.max_in_flight = max(1, int(max_in_flight))
         self.max_queue = None if max_queue is None else int(max_queue)
         self.max_iterations = int(max_iterations)
+        # reference-path stream every admitted stepper consumes; None
+        # inherits the cluster engine spec's default ("lazy" builtin)
+        self.ref_stream = (cluster.spec.ref_stream if ref_stream is None
+                           else ref_stream)
         self.queue: deque[QueryTicket] = deque()
         self.active: list[QueryTicket] = []
         self.finished: list[QueryTicket] = []
@@ -215,6 +220,7 @@ class QueryScheduler:
             tk._stepper = ksp_dg_stepper(
                 self.cluster.dtlp, tk.s, tk.t, tk.k,
                 max_iterations=self.max_iterations,
+                ref_stream=self.ref_stream,
             )
             self.stats.admitted += 1
             self._advance(tk, None)  # prime to the first RefineRequest

@@ -56,6 +56,13 @@ class EngineSpec:
     packs_slab: bool = False
     backend: SolverBackend | None = None
     make_mesh_solver: Callable | None = None
+    # reference-path stream KSP-DG's filter phase consumes when this
+    # engine serves a query (``repro.core.refstream`` registry name).
+    # "lazy" — the Eppstein-style deviation-walk stream — is the serving
+    # default: it removes the corridor-ties truncation mode and makes
+    # each reference O(log) instead of one Yen round; "yen" remains
+    # selectable as the simple-path fallback.
+    ref_stream: str = "lazy"
     description: str = ""
 
     @property
@@ -78,8 +85,11 @@ _REGISTRY: dict[str, EngineSpec] = {}
 
 def register_engine(spec: EngineSpec, *, overwrite: bool = False) -> EngineSpec:
     """Register ``spec`` under ``spec.name``; returns it for chaining."""
+    from repro.core.refstream import get_ref_stream
+
     if not overwrite and spec.name in _REGISTRY:
         raise ValueError(f"engine {spec.name!r} is already registered")
+    get_ref_stream(spec.ref_stream)  # fail fast on unknown streams
     _REGISTRY[spec.name] = spec
     return spec
 

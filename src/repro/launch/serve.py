@@ -26,6 +26,7 @@ from repro.service import (
     ServiceConfig,
     UpdateBatch,
     available_engines,
+    available_ref_streams,
 )
 
 
@@ -50,6 +51,13 @@ def main():
         help="refine engine spec: pyen (host Yen), dense_bf (jnp grouped "
         "BF), pallas_bf (fused Pallas kernel; interpret-mode off-TPU — "
         "identical answers to dense_bf)",
+    )
+    ap.add_argument(
+        "--ref-stream", choices=available_ref_streams(), default=None,
+        help="reference-path stream for KSP-DG's filter phase: lazy "
+        "(Eppstein-style deviation walks, the engine default — immune to "
+        "the corridor-ties truncation mode) or yen (simple-path "
+        "fallback); default inherits the engine spec",
     )
     ap.add_argument(
         "--mesh", action="store_true",
@@ -87,7 +95,10 @@ def main():
     ap.add_argument(
         "--rebaseline-drift", type=float, default=0.05,
         help="re-anchor DTLP bounds when mean weight drift exceeds this "
-        "(loose bounds blow up KSP-DG iteration counts); 0 disables",
+        "(loose bounds blow up KSP-DG iteration counts); 0 disables. "
+        "This driver streams heavy updates every epoch, so its default "
+        "(0.05) is deliberately more aggressive than ServiceConfig's "
+        "general-purpose 0.3",
     )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -113,6 +124,7 @@ def main():
         straggler_factor=(args.straggler_factor
                           if args.straggler_factor > 0 else None),
         rebaseline_drift=args.rebaseline_drift,
+        ref_stream=args.ref_stream,
     )
     g = grid_road_network(args.rows, args.cols, seed=args.seed)
     print(f"road network: {g.n} vertices, {g.m} edges")

@@ -22,6 +22,12 @@ from repro.engine.backend import (  # noqa: F401
     PallasBackend,
     SolverBackend,
 )
+from repro.core.refstream import (  # noqa: F401
+    ReferenceStreamSpec,
+    available_ref_streams,
+    get_ref_stream,
+    register_ref_stream,
+)
 from repro.engine.layout import SlabLayout  # noqa: F401
 from repro.engine.registry import (  # noqa: F401
     EngineSpec,
@@ -60,6 +66,10 @@ __all__ = [
     "register_engine",
     "get_engine",
     "available_engines",
+    "ReferenceStreamSpec",
+    "register_ref_stream",
+    "get_ref_stream",
+    "available_ref_streams",
     "SolverBackend",
     "JnpBackend",
     "PallasBackend",

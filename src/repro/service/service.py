@@ -86,6 +86,7 @@ class KSPService:
         self.scheduler = QueryScheduler(
             cluster, max_in_flight=cfg.max_in_flight,
             max_queue=cfg.max_queue, max_iterations=cfg.max_iterations,
+            ref_stream=cfg.ref_stream,
         )
         self.stats = ServiceStats()
         self._qid = itertools.count()

@@ -157,12 +157,25 @@ class ServiceConfig:
     # to catch a genuinely overloaded one (10x+ in the paper's setting)
     straggler_factor: float | None = 8.0
     straggler_min_tasks: int = 8
-    rebaseline_drift: float = 0.0  # 0 disables drift-triggered rebaseline
+    # drift-triggered DTLP rebaseline at the update barrier, ON by
+    # default: past ~0.3 mean |w/w⁰−1| the skeleton bounds are loose
+    # enough that the extra KSP-DG iterations per query cost more than an
+    # occasional index rebuild (ROADMAP "Tail latency after drift" —
+    # post-update queries ran 10-100x slower before this fired anywhere
+    # but launch/serve).  0 disables.
+    rebaseline_drift: float = 0.3
+    # reference-path stream for KSP-DG's filter phase: a
+    # ``repro.core.refstream`` name ("lazy" / "yen"); None inherits the
+    # engine spec's default ("lazy" for all builtin engines)
+    ref_stream: str | None = None
 
     def __post_init__(self):
+        from repro.core.refstream import get_ref_stream
         from repro.engine.registry import get_engine
 
         get_engine(self.engine)  # fail fast on unknown engines
+        if self.ref_stream is not None:
+            get_ref_stream(self.ref_stream)  # ... and unknown streams
         if self.n_workers < 1:
             raise ValueError("n_workers must be ≥ 1")
         if self.max_in_flight < 1:

@@ -524,6 +524,43 @@ class TestCheckpointRoundTrip:
         assert got.epoch == want.epoch == 1
 
 
+class TestDriftRebaseline:
+    """The drift-triggered rebaseline lives in the SERVICE update path
+    (ROADMAP "Tail latency after drift"): every entry point that applies
+    an UpdateBatch through KSPService gets it, not just launch/serve."""
+
+    def _drifted(self, batches, **cfg_kw):
+        # the test_system extreme-drift scenario, through the service:
+        # bounds anchored at w0 go nearly vacuous under α=τ=0.9 batches
+        g = grid_road_network(8, 8, seed=4)
+        d = DTLP.build(g, z=12, xi=3)
+        svc = service(d, workers=2, max_iterations=300, **cfg_kw)
+        stream = WeightUpdateStream(g, alpha=0.9, tau=0.9, seed=5)
+        for _ in range(batches):
+            svc.update(UpdateBatch(*stream.next_batch()))
+        return g, svc
+
+    def test_default_config_rebaselines_and_latency_recovers(self):
+        g, svc = self._drifted(batches=1)  # default rebaseline_drift (on)
+        assert svc.stats.rebaselines >= 1
+        assert svc.dtlp.drift() == 0.0  # re-anchored at current weights
+        view = graph_view(g)
+        for s, t in [(60, 21), (3, 58)]:
+            res = svc.query(s, t, k=4)
+            assert not res.truncated
+            assert res.stats.iterations < 300
+            assert [round(d, 8) for d, _ in res.paths] == [
+                round(d, 8) for d, _ in ksp(view, s, t, 4)
+            ]
+
+    def test_disabled_rebaseline_keeps_degraded_mode(self):
+        _, svc = self._drifted(batches=5, rebaseline_drift=0.0)
+        assert svc.stats.rebaselines == 0
+        assert svc.dtlp.drift() > 0.3
+        res = svc.query(60, 21, k=4)  # capped search degrades (documented)
+        assert res.truncated
+
+
 class TestTypes:
     def test_update_batch_validates(self):
         with pytest.raises(ValueError, match="identical shapes"):
