@@ -16,10 +16,21 @@ predicted queue delay (tick-latency EWMA × queue depth), and the reject
 rate is reported alongside the throughput rows (fig="batch_slo" rows in
 ``results/bench_batch.json``).
 
+``--mixed`` adds a heterogeneous leg (fig="batch_mixed"): power-law k
+and power-law path lengths — mostly small local queries with a heavy
+tail of big spans, like real navigation traffic.  Mixed sizes are where
+the lockstep tick stalled (every query waited on the slowest cohort's
+solve each round); the pipelined scheduler overlaps them, and the rows
+report what that buys — p50/p95 latency, per-worker idle fraction, and
+peak pipeline occupancy.
+
 ``--smoke`` doubles as the CI regression gate: it FAILS (exit 1) when
 dense_bf qps at concurrency 8 drops below 90% of concurrency 1 (best of
 3 passes each — strict equality would flake on shared-runner noise) —
-batching must never cost throughput.
+batching must never cost throughput — or when the mixed leg's p50 at
+concurrency 8 exceeds 1.2x concurrency 1: heterogeneous concurrency
+must never cost median latency, which is exactly what a re-introduced
+lockstep barrier would do.
 
 ``--engine`` takes any registered spec — ``--engine pallas_bf`` replays
 the same trace through the Pallas ``bf_relax`` backend (interpret-mode
@@ -61,6 +72,41 @@ def _serve(dtlp, engine, workers, qs, k, concurrency):
     return svc, tickets, total
 
 
+def _mixed_requests(g, n, k_cap=6, seed=11):
+    """Power-law mixed workload: k ~ zipf(2.0) clipped to [1, k_cap] and
+    path spans ~ zipf(1.5) grid hops — mostly small local queries, a
+    heavy tail of big ones."""
+    rng = np.random.default_rng(seed)
+    side = int(round(np.sqrt(g.n)))
+    reqs = []
+    for _ in range(n):
+        k = int(np.clip(rng.zipf(2.0), 1, k_cap))
+        hops = int(np.clip(rng.zipf(1.5), 1, 2 * (side - 1)))
+        sr, sc = int(rng.integers(side)), int(rng.integers(side))
+        dr = int(rng.integers(hops + 1))
+        dc = hops - dr
+        tr = int(np.clip(sr + (dr if rng.random() < 0.5 else -dr),
+                         0, side - 1))
+        tc = int(np.clip(sc + (dc if rng.random() < 0.5 else -dc),
+                         0, side - 1))
+        s, t = sr * side + sc, tr * side + tc
+        if s == t:
+            t = tr * side + (tc + 1) % side
+        reqs.append(QueryRequest(s, t, k))
+    return reqs
+
+
+def _serve_mixed(dtlp, engine, workers, reqs, concurrency):
+    """One timed mixed-size pass (per-request k), fresh service."""
+    svc = KSPService(dtlp, _config(engine, workers, concurrency))
+    t0 = time.perf_counter()
+    tickets = svc.replay(reqs)
+    total = time.perf_counter() - t0
+    if not all(tk.result is not None for tk in tickets):
+        raise AssertionError("unbounded replay must serve every query")
+    return svc, tickets, total
+
+
 def _serve_slo(dtlp, engine, workers, qs, k, concurrency,
                arrival_rate, deadline_ms, seed=7):
     """Overload pass: Poisson arrivals + per-query deadline admission."""
@@ -73,8 +119,9 @@ def _serve_slo(dtlp, engine, workers, qs, k, concurrency,
     return svc
 
 
-def bench_batch(quick=True, engine=None, smoke=False):
+def bench_batch(quick=True, engine=None, smoke=False, mixed=False):
     engines = [engine] if engine else ["pyen", "dense_bf"]
+    mixed = mixed or smoke  # the CI gate needs the mixed rows
     if smoke:
         g, z = build_network("NY-s", True)
         n_q, workers, k = 6, 2, 3
@@ -147,7 +194,59 @@ def bench_batch(quick=True, engine=None, smoke=False):
                 reject_rate=round(rejected / len(slo_qs), 4),
             )
         )
+    # ---- mixed-size leg: power-law k / path lengths (fig=batch_mixed) ----
+    mixed_p50: dict = {}
+    if mixed:
+        mreqs = _mixed_requests(g, n_q)
+        for eng in engines:
+            for c in CONCURRENCIES:  # warm jit buckets per level
+                _serve_mixed(d, eng, workers, mreqs, c)
+            best = {}
+            for _ in range(repeat):
+                for c in CONCURRENCIES:
+                    run = _serve_mixed(d, eng, workers, mreqs, c)
+                    if c not in best or run[-1] < best[c][-1]:
+                        best[c] = run
+            for c in CONCURRENCIES:
+                svc, tickets, total = best[c]
+                st = svc.scheduler.stats
+                lat = sorted(tk.result.latency_ms for tk in tickets)
+                idle = st.idle_fracs()
+                mixed_p50.setdefault(eng, {})[c] = lat[len(lat) // 2]
+                rows.append(
+                    dict(
+                        fig="batch_mixed", engine=eng, concurrency=c,
+                        n_queries=len(mreqs), workers=workers,
+                        total_s=round(total, 3),
+                        qps=round(len(mreqs) / total, 2),
+                        p50_ms=round(lat[len(lat) // 2], 1),
+                        p95_ms=round(lat[int(len(lat) * 0.95)
+                                         - (len(lat) == 1)], 1),
+                        # peak dispatched-but-unfinished batches across
+                        # all worker pipes (1 would mean lockstep)
+                        occupancy=st.max_inflight_batches,
+                        idle_fracs={str(w): round(f, 4)
+                                    for w, f in idle.items()},
+                        dedup_frac=round(
+                            st.tasks_deduped / max(1, st.tasks_requested), 4
+                        ),
+                    )
+                )
     emit("batch", rows)
+    if smoke and "dense_bf" in mixed_p50:
+        p1 = mixed_p50["dense_bf"][1]
+        p8 = mixed_p50["dense_bf"][CONCURRENCIES[-1]]
+        # heterogeneous concurrency must not cost median latency — the
+        # signature of a lockstep barrier (every query waiting on the
+        # slowest cohort each round) is mixed p50 RISING with concurrency
+        if p8 > 1.2 * p1:
+            raise SystemExit(
+                f"REGRESSION: mixed-workload p50 at concurrency 8 "
+                f"({p8:.1f}ms) exceeds 1.2x concurrency 1 ({p1:.1f}ms) — "
+                "the pipeline is stalling on mixed query sizes"
+            )
+        print(f"smoke gate OK: dense_bf mixed p50 {p1:.1f}ms (c=1) → "
+              f"{p8:.1f}ms (c=8)")
     if smoke and "dense_bf" in qps_by_engine:
         q1 = qps_by_engine["dense_bf"][1]
         q8 = qps_by_engine["dense_bf"][CONCURRENCIES[-1]]
@@ -163,8 +262,8 @@ def bench_batch(quick=True, engine=None, smoke=False):
     return rows
 
 
-def main(quick=True, engine=None, smoke=False):
-    bench_batch(quick, engine=engine, smoke=smoke)
+def main(quick=True, engine=None, smoke=False, mixed=False):
+    bench_batch(quick, engine=engine, smoke=smoke, mixed=mixed)
 
 
 if __name__ == "__main__":
@@ -176,8 +275,12 @@ if __name__ == "__main__":
     ap.add_argument("--engine", choices=available_engines(), default=None,
                     help="default: benchmark both engines")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--mixed", action="store_true",
+                    help="add the power-law mixed-size leg (fig="
+                    "batch_mixed: p50/p95, per-worker idle, occupancy)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run that exercises the batched path and "
-                    "fails on a c=8-vs-c=1 dense qps regression")
+                    "fails on a c=8-vs-c=1 dense qps regression or a "
+                    "mixed-workload p50 latency regression")
     a = ap.parse_args()
-    main(quick=not a.full, engine=a.engine, smoke=a.smoke)
+    main(quick=not a.full, engine=a.engine, smoke=a.smoke, mixed=a.mixed)

@@ -286,7 +286,11 @@ class RefineRequest:
     ``pairs`` are the adjacent (a, b) global-id pairs along the current
     reference path; the consumer must answer with one partial-KSP segment
     list per pair (ascending ``[(dist, global-path-tuple)]``, length ≤ k)
-    via ``generator.send(seg_lists)``.  ``stats`` is the query's live
+    via ``generator.send(seg_lists)`` — either a list aligned with
+    ``pairs`` or a ``{pair_index: seg_list}`` dict covering every index,
+    so a pipelined scheduler assembling results out of dispatch order
+    (per-worker batches complete whenever their device round lands) can
+    hand them over without re-sorting.  ``stats`` is the query's live
     ``QueryStats`` so refiners can account cache hits / tasks in place.
     """
 
@@ -390,6 +394,10 @@ def ksp_dg_stepper(
             stats.iterations += 1
             seg_lists = yield RefineRequest(pairs=pairs, home=home, k=k,
                                             stats=stats)
+            if isinstance(seg_lists, dict):
+                # out-of-order delivery: per-worker pipelines answer in
+                # completion order, keyed by pair index — realign here
+                seg_lists = [seg_lists[j] for j in range(len(pairs))]
             for idxs in ref_pairs:
                 for d, p in _k_best_joins([seg_lists[j] for j in idxs], k):
                     if p not in L_set:
@@ -399,8 +407,26 @@ def ksp_dg_stepper(
             for d_, p_ in L[k:]:
                 L_set.discard(p_)
             L = L[:k]
-        if pending is not None and len(L) >= k and L[k - 1][0] <= pending[0] + TIE_EPS:
-            break
+        if pending is not None and len(L) >= k:
+            # sharpened stop rule: only SIMPLE references can ever seed a
+            # simple candidate (every join of a repeated-vertex walk is
+            # itself non-simple), so the binding Theorem-3 lower bound is
+            # the next simple reference's weight, not the next raw
+            # walk's.  Skip-and-consume non-simple walks up to that
+            # reference — or until any walk already outweighs L[k-1],
+            # which certifies the stop on its own; the reference budget
+            # bounds the scan on walk-dense tie plateaus.
+            while (pending is not None
+                   and stats.references < ref_budget
+                   and pending[0] <= L[k - 1][0] + TIE_EPS):
+                ref_path = [global_of_ext[v] for v in pending[1]]
+                if len(set(ref_path)) == len(ref_path):
+                    break  # simple: its weight is the sharp bound
+                stats.references += 1
+                stats.walks_skipped += 1
+                pending = next(refs, None)
+            if pending is None or L[k - 1][0] <= pending[0] + TIE_EPS:
+                break
     else:
         stats.truncated = pending is not None
     return L, stats

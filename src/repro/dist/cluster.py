@@ -99,6 +99,78 @@ class WorkerStats:
     lat_calls: int = 0  # scored solve calls (excludes the warmup call)
 
 
+class SolveFuture:
+    """Handle for one in-flight ``Worker.execute_async`` batch.
+
+    ``step()`` advances the engine's refine generator by one device
+    round: it forces the previous round's solve, does the host-side
+    absorb/promote work, and dispatches the next round — leaving that
+    round chewing on the device while the caller goes off and steps
+    OTHER workers' futures.  When the generator finishes, the future
+    fills the worker's partial-KSP cache, folds the accumulated step
+    time into the straggler EWMA, and ``result()`` becomes available.
+
+    The step clock sums only time spent INSIDE ``step()`` — device time
+    that elapses while the future sits suspended (the overlap the
+    pipeline exists to create) is not charged to this worker, so the
+    straggler signal measures the worker's own service rate, not the
+    scheduler's interleaving.
+    """
+
+    __slots__ = ("worker", "epoch", "k", "n_tasks", "out", "_gen",
+                 "_misses", "_host_s", "_done")
+
+    def __init__(self, worker, epoch, k, out, misses, gen):
+        self.worker = worker
+        self.epoch = epoch
+        self.k = k
+        self.n_tasks = len(misses)
+        self.out = out
+        self._misses = misses
+        self._gen = gen
+        self._host_s = 0.0
+        # no generator + misses = the host-only engine path: the worker
+        # solves inline and calls _finish before handing the future out
+        self._done = gen is None and not misses
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def step(self) -> bool:
+        """Advance one device round; returns True once the batch is done.
+        Safe to call on a finished future (no-op)."""
+        if self._done:
+            return True
+        t0 = time.perf_counter()
+        try:
+            next(self._gen)
+        except StopIteration as fin:
+            self._host_s += time.perf_counter() - t0
+            self._finish(fin.value)
+            return True
+        self._host_s += time.perf_counter() - t0
+        return False
+
+    def result(self) -> dict:
+        """The ``{(gid, a, b): [(dist, path)]}`` map; done futures only."""
+        if not self._done:
+            raise RuntimeError("SolveFuture not done; step() it first")
+        return self.out
+
+    def _finish(self, solved: dict) -> None:
+        w = self.worker
+        for gid, a, b in self._misses:
+            paths = solved[(gid, a, b)]
+            w.cache.put((self.epoch, gid, a, b, self.k, w.engine), paths)
+            self.out[(gid, a, b)] = paths
+        if self._misses:
+            cost = sum(w._cost.get(gid, 1.0) for gid, _, _ in self._misses)
+            w._observe_latency(self._host_s, cost, len(self._misses))
+        self._gen = None
+        self._done = True
+
+
 class Worker:
     """One in-process worker: owns the slabs/caches of its subgraphs.
 
@@ -148,10 +220,12 @@ class Worker:
             self.row_of = {int(g): i for i, g in enumerate(self.slab.gids)}
 
     # ------------------------------------------------------------- refine
-    def execute(self, tasks, k: int) -> dict:
-        """tasks: [(gid, a, b)] with global vertex ids, all owned here.
-
-        Returns {(gid, a, b): [(dist, global-path-tuple)], ...}.
+    def execute_async(self, tasks, k: int) -> SolveFuture:
+        """Non-blocking form of :meth:`execute`: partition cache hits up
+        front, then hand back a :class:`SolveFuture` whose ``step()``
+        advances the engine's refine generator one device round at a
+        time.  All-hit batches (and host-only engines, which have no
+        device rounds to overlap) come back already done.
         """
         epoch = self.ensure_epoch()
         out: dict = {}
@@ -165,19 +239,32 @@ class Worker:
                 out[(gid, a, b)] = hit
             else:
                 misses.append((gid, a, b))
-        if misses:
-            # straggler signal: clock the real solve only — cache-hit
-            # round-trips are ~free and would wash the EWMA with noise
+        if not misses:
+            return SolveFuture(self, epoch, k, out, [], None)
+        if self.spec.refine_async is None:
+            # host-only engine: solve inline, clocked like the old path —
+            # straggler signal times the real solve only (cache-hit
+            # round-trips are ~free and would wash the EWMA with noise)
+            fut = SolveFuture(self, epoch, k, out, misses, None)
             t0 = time.perf_counter()
             solved = self.spec.refine(self, misses, k)
-            dt = time.perf_counter() - t0
-            for gid, a, b in misses:
-                paths = solved[(gid, a, b)]
-                self.cache.put((epoch, gid, a, b, k, self.engine), paths)
-                out[(gid, a, b)] = paths
-            cost = sum(self._cost.get(gid, 1.0) for gid, _, _ in misses)
-            self._observe_latency(dt, cost, len(misses))
-        return out
+            fut._host_s = time.perf_counter() - t0
+            fut._finish(solved)
+            return fut
+        gen = self.spec.refine_async(self, misses, k)
+        return SolveFuture(self, epoch, k, out, misses, gen)
+
+    def execute(self, tasks, k: int) -> dict:
+        """tasks: [(gid, a, b)] with global vertex ids, all owned here.
+
+        Returns {(gid, a, b): [(dist, global-path-tuple)], ...}.
+        Synchronous drain of :meth:`execute_async` — one implementation,
+        two schedules.
+        """
+        fut = self.execute_async(tasks, k)
+        while not fut.step():
+            pass
+        return fut.result()
 
     def ensure_epoch(self) -> int:
         """Refuse-or-resync epoch gate: the only way into ``execute``.

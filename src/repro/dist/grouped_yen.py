@@ -34,62 +34,47 @@ _INF = float(INF)
 _DEFAULT_BACKEND = JnpBackend()
 
 
-def _solve_round(adj, jobs, solver, s_multiple, backend):
-    """One grouped solve.  ``jobs``: (row, spur, banned_v, banned_next, cap).
+def _dispatch_round(adj, jobs, solver, s_multiple, backend):
+    """Pack one round's jobs and ISSUE the grouped solve — non-blocking.
 
-    Returns per-job (dist[z], parent[z]) numpy rows, in job order.
-    Rows/problems are packed into [S', J, z] with S' the slab rows this
-    round touches — hot rows split across duplicates (the backend
-    layout's ``bucket_shape``) — padded to a jit-friendly bucket that is
-    a multiple of ``s_multiple`` (the mesh device count when the solver
-    is a shard_map refine fn).
+    ``jobs``: (row, spur, banned_v, banned_next, cap).  Packing goes
+    through the backend layout's ``pack_round`` (fresh donation-safe
+    scratch buffers, hot rows split across duplicates, bucket a multiple
+    of ``s_multiple`` — the mesh device count when the solver is a
+    shard_map refine fn).  The jax call async-dispatches and returns
+    unforced device arrays: the device works on them while the host
+    moves on (``jax.block_until_ready`` is deliberately deferred to
+    ``_collect_round``).
+
+    Returns an opaque pending handle for ``_collect_round``, or None on
+    zero jobs.
     """
     if not jobs:
-        return []
-    z = adj.shape[-1]
-    counts: dict = {}
-    for row, *_ in jobs:
-        counts[row] = counts.get(row, 0) + 1
-    S_pad, J_pad = backend.layout.bucket_shape(
-        list(counts.values()), s_multiple
-    )
-
-    slab_rows: list[int] = []  # original slab row per packed position
-    cursor: dict = {}  # row → [packed position, jobs filled there]
-    slots = []
-    for row, *_ in jobs:
-        cur = cursor.get(row)
-        if cur is None or cur[1] == J_pad:
-            cur = [len(slab_rows), 0]
-            slab_rows.append(row)
-        slots.append((cur[0], cur[1]))
-        cur[1] += 1
-        cursor[row] = cur
-    S_ = len(slab_rows)
-
-    adj_used = np.empty((S_pad, z, z), np.float32)
-    adj_used[:S_] = adj[slab_rows]
-    adj_used[S_:] = adj[slab_rows[0]]  # filler rows; their problems stay all-INF
-    init = np.full((S_pad, J_pad, z), _INF, np.float32)
-    bv = np.zeros((S_pad, J_pad, z), bool)
-    so = np.zeros((S_pad, J_pad, z), bool)
-    bn = np.zeros((S_pad, J_pad, z), bool)
-    cap = np.full((S_pad, J_pad), _INF, np.float32)
-    for (sr, j), (row, spur, banned_v, banned_next, job_cap) in zip(slots, jobs):
-        init[sr, j, spur] = 0.0
-        bv[sr, j] = banned_v
-        so[sr, j, spur] = True
-        bn[sr, j] = banned_next
-        cap[sr, j] = job_cap
-
+        return None
+    buffers, slots = backend.layout.pack_round(adj, jobs, s_multiple)
     solve = solver if solver is not None else backend.solve_grouped
-    dist, parent = solve(
-        jnp.asarray(adj_used), jnp.asarray(init), jnp.asarray(bv),
-        jnp.asarray(so), jnp.asarray(bn), jnp.asarray(cap),
-    )
+    dist, parent = solve(*(jnp.asarray(b) for b in buffers))
+    return dist, parent, slots
+
+
+def _collect_round(pending):
+    """Force a dispatched round to numpy: per-job (dist[z], parent[z])
+    rows in job order.  This is where the host actually waits on the
+    device — everything between dispatch and collect overlapped."""
+    if pending is None:
+        return []
+    dist, parent, slots = pending
     dist = np.asarray(dist)
     parent = np.asarray(parent)
     return [(dist[sr, j], parent[sr, j]) for sr, j in slots]
+
+
+def _solve_round(adj, jobs, solver, s_multiple, backend):
+    """One grouped solve, dispatch + collect back to back (the lockstep
+    path and tests use this; the pipeline steps the two halves apart)."""
+    return _collect_round(
+        _dispatch_round(adj, jobs, solver, s_multiple, backend)
+    )
 
 
 class _TaskState:
@@ -163,22 +148,20 @@ class _TaskState:
             self.done = True
 
 
-def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
-                s_multiple: int = 1, backend=None):
-    """K shortest simple paths for a batch of same-slab tasks.
+def grouped_ksp_async(adj, tasks, k: int, *, solver=None,
+                      use_cap: bool = True, s_multiple: int = 1,
+                      backend=None):
+    """Generator form of :func:`grouped_ksp`: one ``yield`` per device
+    round, placed AFTER the round's solve has been dispatched and BEFORE
+    it is forced to numpy.
 
-    adj     : float32[S, z, z] packed slab (INF off-edges, 0 diagonal)
-    tasks   : [(slab_row, src, dst)] with local vertex ids
-    backend : a :class:`repro.engine.backend.SolverBackend` supplying
-              the grouped solve and its bucket geometry; default jnp.
-    solver  : (adj, init, bv, so, bn, cap) → (dist, parent) execution
-              override — e.g. a ``repro.dist.shard_refine.
-              make_refine_fn`` product; the backend still supplies
-              geometry.
-    Returns one [(dist, path-tuple)] list per task, ascending.
-
-    A zero-task batch returns [] — the batched dispatch path produces one
-    whenever a tick's tasks were all cache hits.
+    While this generator sits suspended, the device is (on async-dispatch
+    backends) still chewing on the round — a pipelined scheduler resumes
+    OTHER workers' generators in the gap, so host-side splice/absorb work
+    and device solves overlap even though everything is single-threaded.
+    Resuming runs collect → absorb/promote → next dispatch → yield.
+    The return value (``StopIteration.value``) is the per-task result
+    list; drive it synchronously via :func:`grouped_ksp`.
     """
     if not tasks:
         return []
@@ -199,7 +182,9 @@ def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
             first_of[key] = len(jobs)
             jobs.append((st.row, st.src, np.zeros(z, bool),
                          np.zeros(z, bool), _INF))
-    round0 = _solve_round(adj, jobs, solver, s_multiple, backend)
+    pending = _dispatch_round(adj, jobs, solver, s_multiple, backend)
+    yield
+    round0 = _collect_round(pending)
     for st in states:
         dist, parent = round0[first_of[(st.row, st.src)]]
         if dist[st.dst] >= _INF / 2:
@@ -224,10 +209,40 @@ def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
             jobs.extend(j)
             metas.append(m)
             owners.append(st)
-        results = _solve_round(adj, jobs, solver, s_multiple, backend)
+        pending = _dispatch_round(adj, jobs, solver, s_multiple, backend)
+        yield
+        results = _collect_round(pending)
         off = 0
         for st, meta in zip(owners, metas):
             st.absorb(meta, results[off : off + len(meta)])
             off += len(meta)
             st.promote(k)
     return [st.found for st in states]
+
+
+def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
+                s_multiple: int = 1, backend=None):
+    """K shortest simple paths for a batch of same-slab tasks.
+
+    adj     : float32[S, z, z] packed slab (INF off-edges, 0 diagonal)
+    tasks   : [(slab_row, src, dst)] with local vertex ids
+    backend : a :class:`repro.engine.backend.SolverBackend` supplying
+              the grouped solve and its bucket geometry; default jnp.
+    solver  : (adj, init, bv, so, bn, cap) → (dist, parent) execution
+              override — e.g. a ``repro.dist.shard_refine.
+              make_refine_fn`` product; the backend still supplies
+              geometry.
+    Returns one [(dist, path-tuple)] list per task, ascending.
+
+    A zero-task batch returns [] — the batched dispatch path produces one
+    whenever a tick's tasks were all cache hits.  This is the synchronous
+    driver over :func:`grouped_ksp_async` (one implementation, two
+    schedules).
+    """
+    gen = grouped_ksp_async(adj, tasks, k, solver=solver, use_cap=use_cap,
+                            s_multiple=s_multiple, backend=backend)
+    while True:
+        try:
+            next(gen)
+        except StopIteration as fin:
+            return fin.value

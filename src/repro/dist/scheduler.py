@@ -1,37 +1,55 @@
-"""Cross-query batched serving: lockstep scheduling of concurrent KSP
+"""Cross-query batched serving: pipelined scheduling of concurrent KSP
 queries over one worker cluster.
 
 ``Cluster.query`` drives one KSP-DG instance at a time, so the grouped
 [S, J, z] dense solves run at single-query occupancy.  The
-``QueryScheduler`` instead keeps N queries in flight as resumable
-steppers (``core.kspdg.ksp_dg_stepper``) and advances them in lockstep
-ticks:
+``QueryScheduler`` keeps N queries in flight as resumable steppers
+(``core.kspdg.ksp_dg_stepper``) and, in its default **pipelined** mode,
+gives every worker its own asynchronous pipe:
 
-    tick:
-      gather   — every active query's pending RefineRequest is grouped
-                 by owning subgraph (``refine_groups``) and routed to the
-                 owner's primary worker;
-      merge    — per-worker task sets are de-duplicated ACROSS queries:
-                 two queries crossing the same boundary pair share one
-                 partial-KSP solve and one cache entry;
-      dispatch — ONE ``Worker.execute`` per worker (per distinct k), so
-                 all queries' cache misses land in the same
-                 ``grouped_ksp``/``bf_solve_grouped`` slab solve;
-      scatter  — results fan back out into per-query segment lists
-                 (``cluster.merge_segments``) and each stepper advances
-                 one KSP-DG iteration.
+    pipe (one per worker):
+      backlog  — batches of (gid, a, b) refine tasks waiting to
+                 dispatch, de-duplicated ACROSS queries per
+                 (epoch, k): a query whose task is already queued (or
+                 already in flight) joins the existing batch instead of
+                 re-requesting it;
+      inflight — up to ``pipeline_depth`` dispatched batches (device
+                 solves issued, results unforced).  The open backlog
+                 batch keeps filling while the previous one solves —
+                 the double-buffered dispatch slot.
+
+    pump (one ``tick``): fill every pipe's free slots, then step each
+    pipe's oldest in-flight batch one device round.  A ``step`` forces
+    the previous round (the only point the host waits on the device),
+    does the host-side Yen absorb/promote, and dispatches the next
+    round — which then cooks on the device while the pump steps OTHER
+    workers' pipes.  Device solves overlap host splicing with no
+    threads: JAX async dispatch does the overlap, the pump does the
+    interleaving.  When a batch completes, every query waiting on it
+    splices its segment lists (``cluster.merge_segments``) and advances
+    one KSP-DG iteration immediately — a query whose stop rule fires
+    resolves its ticket on the spot, at the incrementally-advanced
+    clock, not at a global tick boundary.
+
+``pipeline=False`` retains the original lockstep tick (gather → merge →
+dispatch → scatter, one global barrier per round): it is the reference
+schedule the determinism tests replay against, and the two modes produce
+byte-identical answers — the stepper is the same code, every partial-KSP
+solve is exact regardless of batch composition, and ``merge_segments``
+builds the same segment lists, so scheduling changes the overlap, never
+the math.
 
 Admission control sits on top: a bounded FIFO queue (``max_queue``), a
-cap on in-flight queries per tick (``max_in_flight``) and, in ``run``, a
-batch window that groups simulated arrivals before a tick starts.
+cap on in-flight queries (``max_in_flight``) and, in ``run``, a batch
+window that groups simulated arrivals before a tick starts.
 ``repro.service.KSPService`` is the public serving surface over this
 scheduler — it adds typed requests, epoch stamping/barriers (via
 ``freeze_admission``) and deadline-based SLO admission (via
-``predicted_wait``); ``submit``/``run`` here are internals.
-Answers are identical — distances, paths and tie order — to sequential
-``Cluster.query``: the stepper is the same code and ``merge_segments``
-builds the same segment lists, so batching changes the schedule, never
-the math.
+``predicted_wait``); ``submit``/``run`` here are internals.  Epoch
+safety carries over unchanged: update batches apply only while
+``active`` is empty, and an empty active set implies every pipe is
+drained (a batch always has ≥ 1 waiting query), so all in-flight dedup
+shares one epoch by construction.
 """
 
 from __future__ import annotations
@@ -56,13 +74,39 @@ class BatchStats:
     rejected: int = 0  # bounced by the bounded admission queue
     tasks_requested: int = 0  # per-query (gid, a, b) tasks before merging
     tasks_dispatched: int = 0  # after cross-query de-dup
+    batches_dispatched: int = 0  # grouped Worker.execute batches issued
     max_queue_depth: int = 0
     max_in_flight: int = 0
+    # pipeline occupancy: peak dispatched-but-unfinished batches across
+    # all pipes (≤ n_workers × pipeline_depth; 1 in lockstep mode where
+    # exactly one batch is ever in flight)
+    max_inflight_batches: int = 0
+    # wall seconds inside working (non-idle) ticks, and the share each
+    # worker spent actually being driven (dispatch + step + deliver):
+    # idle fraction of worker w = 1 - worker_busy_s[w] / working_s
+    working_s: float = 0.0
+    worker_busy_s: dict = dataclasses.field(default_factory=dict)
 
     @property
     def tasks_deduped(self) -> int:
-        """Tasks answered by another concurrent query's identical task."""
+        """Tasks answered by another concurrent query's identical task.
+
+        ``tasks_requested`` counts every per-query task at gather time;
+        ``tasks_dispatched`` counts unique tasks per dispatched worker
+        batch — so joins against both QUEUED and IN-FLIGHT batches
+        (per-worker pipeline dedup) land here, exactly like the
+        per-global-tick merge did in lockstep mode.
+        """
         return self.tasks_requested - self.tasks_dispatched
+
+    def idle_fracs(self) -> dict:
+        """Per-worker idle fraction of working time (pipeline health)."""
+        if self.working_s <= 0.0:
+            return {}
+        return {
+            wid: max(0.0, 1.0 - busy / self.working_s)
+            for wid, busy in sorted(self.worker_busy_s.items())
+        }
 
 
 @dataclasses.dataclass
@@ -76,7 +120,7 @@ class QueryTicket:
     arrival: float = 0.0  # scheduler clock at submit
     admitted_at: float | None = None
     finished_at: float | None = None
-    ticks: int = 0  # lockstep rounds this query participated in
+    ticks: int = 0  # KSP-DG refine rounds this query advanced through
     epoch: int | None = None  # graph epoch the query was admitted under
     result: list | None = None
     stats: object = None  # core QueryStats, set on completion
@@ -97,6 +141,64 @@ class QueryTicket:
 
 class QueueFull(RuntimeError):
     """Raised by ``submit`` when the bounded admission queue is full."""
+
+
+class _Batch:
+    """One worker-bound group of de-duplicated refine tasks.
+
+    Fills while in a pipe's backlog (``open``), then dispatches as ONE
+    ``Worker.execute_async`` call; queries joining after dispatch still
+    share its results (their tasks are in ``tasks``), they just can't
+    add new ones — the next open batch takes those.
+    """
+
+    __slots__ = ("wid", "epoch", "k", "tasks", "waiters", "future",
+                 "t_dispatch")
+
+    def __init__(self, wid: int, epoch: int, k: int):
+        self.wid = wid
+        self.epoch = epoch
+        self.k = k
+        self.tasks: dict = {}  # ordered {(gid, a, b): None}
+        self.waiters: dict = {}  # ordered {_Pending: [its tasks here]}
+        self.future = None  # SolveFuture once dispatched
+        self.t_dispatch = None  # perf_counter at dispatch (solve EWMA)
+
+
+class _Pending:
+    """One query's outstanding refine round: which batches it waits on
+    and the per-task results collected so far."""
+
+    __slots__ = ("tk", "req", "pair_gids", "results", "missing")
+
+    def __init__(self, tk: QueryTicket, req, pair_gids):
+        self.tk = tk
+        self.req = req
+        self.pair_gids = pair_gids
+        self.results: dict = {}  # (gid, a, b) → [(dist, path)]
+        self.missing = 0  # undelivered batches this round waits on
+
+
+class _WorkerPipe:
+    """One worker's asynchronous pipeline state."""
+
+    __slots__ = ("wid", "open", "backlog", "inflight", "solve_ewma",
+                 "solve_samples")
+
+    def __init__(self, wid: int):
+        self.wid = wid
+        self.open: dict = {}  # (epoch, k) → the backlog batch still filling
+        self.backlog: deque = deque()  # batches awaiting a dispatch slot
+        self.inflight: deque = deque()  # dispatched, ≤ pipeline_depth
+        # EWMA of dispatch→delivery wall seconds per batch: the
+        # per-worker service-time signal predicted_wait multiplies by
+        # this pipe's depth
+        self.solve_ewma = 0.0
+        self.solve_samples = 0
+
+    @property
+    def depth(self) -> int:
+        return len(self.backlog) + len(self.inflight)
 
 
 def drive_trace(sched, arrivals, submit_at, tick, *,
@@ -139,17 +241,21 @@ def drive_trace(sched, arrivals, submit_at, tick, *,
 
 
 class QueryScheduler:
-    """Lockstep cross-query batching over a ``Cluster``.
+    """Cross-query batching over a ``Cluster`` — pipelined by default,
+    lockstep under ``pipeline=False``.
 
     The scheduler keeps its own simulated clock: ``run`` advances it by
-    each tick's measured wall time plus the arrival process, so latency
-    percentiles reflect queueing delay under the given concurrency even
-    though execution is single-threaded in-process.
+    measured wall time plus the arrival process, so latency percentiles
+    reflect queueing delay under the given concurrency even though
+    execution is single-threaded in-process.  In pipelined mode the
+    clock advances *incrementally inside* a tick, so a query completing
+    mid-pump is stamped at its actual completion instant.
     """
 
     def __init__(self, cluster: Cluster, *, max_in_flight: int = 8,
                  max_queue: int | None = None, max_iterations: int = 10_000,
-                 ref_stream=None):
+                 ref_stream=None, pipeline: bool = True,
+                 pipeline_depth: int = 2):
         self.cluster = cluster
         self.max_in_flight = max(1, int(max_in_flight))
         self.max_queue = None if max_queue is None else int(max_queue)
@@ -158,27 +264,48 @@ class QueryScheduler:
         # inherits the cluster engine spec's default ("lazy" builtin)
         self.ref_stream = (cluster.spec.ref_stream if ref_stream is None
                            else ref_stream)
+        self.pipeline = bool(pipeline)
+        self.pipeline_depth = max(1, int(pipeline_depth))
         self.queue: deque[QueryTicket] = deque()
         self.active: list[QueryTicket] = []
         self.finished: list[QueryTicket] = []
         self.stats = BatchStats()
         self._qid = itertools.count()
         self.clock = 0.0
-        # EWMA of working-tick wall latency (seconds): the predicted-
-        # queue-delay signal SLO admission multiplies by queue depth
+        # EWMA of working-tick wall latency (seconds): the queue-depth
+        # term of predicted_wait in both modes (a pipelined tick is one
+        # pump round: bounded by a single batch delivery)
         self.tick_latency_ewma = 0.0
         self._tick_samples = 0
         # epoch barrier hook (repro.service): while True, ticks keep
         # advancing in-flight queries but admit nothing, so a pending
         # UpdateBatch can be ordered after every query it must not affect
         self.freeze_admission = False
+        # pipelined-mode state: per-worker pipes, the cross-query join
+        # index (epoch, k, gid, a, b) → _Batch (queued OR in flight),
+        # and the incremental clock mark (valid inside a tick only)
+        self._pipes: dict[int, _WorkerPipe] = {}
+        self._task_index: dict = {}
+        self._mark: float | None = None
 
     def predicted_wait(self) -> float:
-        """Predicted queueing delay (seconds) of the next submission:
-        EWMA of recent tick latency × current queue depth.  Zero until
-        the first working tick has been observed — admission must not
-        reject on a cold scheduler."""
-        return self.tick_latency_ewma * len(self.queue)
+        """Predicted queueing delay (seconds) of the next submission.
+
+        Lockstep: EWMA of recent tick latency × admission-queue depth.
+        Pipelined: the deepest worker pipe bounds service — backlog +
+        in-flight batches × that pipe's solve-time EWMA — plus the same
+        queue term for submissions still waiting to be admitted.  Zero
+        until first observations — admission must not reject on a cold
+        scheduler.
+        """
+        queue_term = self.tick_latency_ewma * len(self.queue)
+        if not self.pipeline:
+            return queue_term
+        worst = 0.0
+        for pipe in self._pipes.values():
+            if pipe.solve_ewma > 0.0 and pipe.depth:
+                worst = max(worst, pipe.depth * pipe.solve_ewma)
+        return worst + queue_term
 
     # ----------------------------------------------------------- admission
     def submit(self, s: int, t: int, k: int, *,
@@ -214,6 +341,7 @@ class QueryScheduler:
         if self.freeze_admission:
             return
         while self.queue and len(self.active) < self.max_in_flight:
+            self._stamp_clock()  # pipelined: admit at the current instant
             tk = self.queue.popleft()
             tk.admitted_at = self.clock
             tk.epoch = self.cluster.epoch  # the epoch that will answer it
@@ -226,6 +354,8 @@ class QueryScheduler:
             self._advance(tk, None)  # prime to the first RefineRequest
             if not tk.done:
                 self.active.append(tk)
+                if self.pipeline:
+                    self._gather(tk)
         self.stats.max_in_flight = max(self.stats.max_in_flight,
                                        len(self.active))
 
@@ -243,15 +373,196 @@ class QueryScheduler:
             self.finished.append(tk)
             self.stats.completed += 1
 
+    # -------------------------------------------------- pipelined serving
+    def _stamp_clock(self) -> None:
+        """Advance the simulated clock by the wall time elapsed since
+        the last stamp — the incremental form of lockstep's one
+        clock-add per tick, valid only inside a pipelined tick."""
+        if self._mark is None:
+            return
+        now = time.perf_counter()
+        self.clock += now - self._mark
+        self._mark = now
+
+    def _gather(self, tk: QueryTicket) -> None:
+        """Route one query round's tasks into worker pipes, joining any
+        queued or in-flight batch that already carries a task."""
+        req = tk._request
+        pair_gids, groups = refine_groups(self.cluster.dtlp, req.pairs,
+                                          req.home)
+        pending = _Pending(tk, req, pair_gids)
+        epoch = self.cluster.epoch
+        for gid, items in groups.items():
+            for _, a, b in items:
+                self.stats.tasks_requested += 1
+                self._enqueue_task(pending, epoch, req.k, (gid, a, b))
+        if pending.missing == 0:
+            # degenerate round with no refine work: splice right away
+            self._splice(pending)
+
+    def _enqueue_task(self, pending: _Pending, epoch: int, k: int,
+                      task) -> None:
+        ikey = (epoch, k, task)
+        batch = self._task_index.get(ikey)
+        if batch is None:
+            worker, reissued = self.cluster.route(task[0])
+            if reissued:
+                self.cluster.reissues += 1
+            pipe = self._pipes.get(worker.wid)
+            if pipe is None:
+                pipe = self._pipes[worker.wid] = _WorkerPipe(worker.wid)
+            batch = pipe.open.get((epoch, k))
+            if batch is None:
+                batch = _Batch(worker.wid, epoch, k)
+                pipe.open[(epoch, k)] = batch
+                pipe.backlog.append(batch)
+            batch.tasks[task] = None
+            self._task_index[ikey] = batch
+        # else: cross-query join — the task is already queued or in
+        # flight; this query just waits on that batch (counted as dedup
+        # via tasks_requested - tasks_dispatched)
+        waiting = batch.waiters.get(pending)
+        if waiting is None:
+            waiting = batch.waiters[pending] = []
+            pending.missing += 1
+        waiting.append(task)
+
+    def _dispatch_pipe(self, pipe: _WorkerPipe) -> None:
+        """Fill this pipe's free dispatch slots from its backlog."""
+        while pipe.backlog and len(pipe.inflight) < self.pipeline_depth:
+            batch = pipe.backlog.popleft()
+            pipe.open.pop((batch.epoch, batch.k), None)
+            worker = self.cluster.workers[pipe.wid]
+            if not worker.alive:
+                # died between gather and dispatch: re-route every task
+                # (and its waiters) through the replica placement
+                self._requeue(batch)
+                continue
+            t0 = time.perf_counter()
+            batch.future = worker.execute_async(list(batch.tasks), batch.k)
+            busy = time.perf_counter() - t0
+            self.stats.worker_busy_s[pipe.wid] = (
+                self.stats.worker_busy_s.get(pipe.wid, 0.0) + busy)
+            batch.t_dispatch = t0
+            self.stats.batches_dispatched += 1
+            self.stats.tasks_dispatched += len(batch.tasks)
+            pipe.inflight.append(batch)
+
+    def _requeue(self, batch: _Batch) -> None:
+        for task in batch.tasks:
+            ikey = (batch.epoch, batch.k, task)
+            if self._task_index.get(ikey) is batch:
+                del self._task_index[ikey]
+        for pending, tasks in batch.waiters.items():
+            pending.missing -= 1
+            for task in tasks:
+                self._enqueue_task(pending, batch.epoch, batch.k, task)
+
+    def _deliver(self, batch: _Batch, pipe: _WorkerPipe) -> None:
+        """Fan one completed batch's results out to its waiting queries;
+        any query whose round is now complete splices and advances."""
+        results = batch.future.result()
+        if batch.t_dispatch is not None:
+            service = time.perf_counter() - batch.t_dispatch
+            pipe.solve_ewma = (service if pipe.solve_samples == 0
+                               else 0.3 * service + 0.7 * pipe.solve_ewma)
+            pipe.solve_samples += 1
+        for task in batch.tasks:
+            ikey = (batch.epoch, batch.k, task)
+            if self._task_index.get(ikey) is batch:
+                del self._task_index[ikey]
+        for pending, tasks in batch.waiters.items():
+            for task in tasks:
+                pending.results[task] = results[task]
+            pending.missing -= 1
+            if pending.missing == 0:
+                self._splice(pending)
+
+    def _splice(self, pending: _Pending) -> None:
+        """Complete one query round: merge segment lists, advance the
+        stepper one KSP-DG iteration at the current clock instant, and
+        either finish the query (immediately freeing its slot to the
+        admission queue) or gather its next round into the pipes."""
+        tk = pending.tk
+        req = pending.req
+        seg_lists = merge_segments(req.pairs, pending.pair_gids,
+                                   pending.results, req.k)
+        req.stats.refine_tasks += len(req.pairs)
+        tk.ticks += 1
+        self._stamp_clock()
+        self._advance(tk, seg_lists)
+        if tk.done:
+            self.active.remove(tk)
+            self._admit()  # a slot freed mid-pump: pull the next query in
+        else:
+            self._gather(tk)
+
+    def _tick_pipeline(self) -> list[QueryTicket]:
+        """One pump round: fill dispatch slots, step every pipe's oldest
+        in-flight batch one device round, deliver completions.  Returns
+        after ≥ 1 batch delivery (so the replay loop can interleave
+        arrivals) or when nothing is in flight."""
+        t_begin = time.perf_counter()
+        self._mark = t_begin
+        n_fin = len(self.finished)
+        self._admit()
+        if not self.active:
+            # idle (or admission-frozen with nothing in flight): ~free
+            self._stamp_clock()
+            self._mark = None
+            return self.finished[n_fin:]
+        self.stats.ticks += 1
+        progressed = len(self.finished) > n_fin  # admission may complete
+        while not progressed:
+            for wid in sorted(self._pipes):
+                self._dispatch_pipe(self._pipes[wid])
+            inflight_now = sum(len(p.inflight)
+                               for p in self._pipes.values())
+            self.stats.max_inflight_batches = max(
+                self.stats.max_inflight_batches, inflight_now)
+            stepped = False
+            for wid in sorted(self._pipes):
+                pipe = self._pipes[wid]
+                if not pipe.inflight:
+                    continue
+                stepped = True
+                batch = pipe.inflight[0]
+                t0 = time.perf_counter()
+                done = batch.future.step()
+                self.stats.worker_busy_s[wid] = (
+                    self.stats.worker_busy_s.get(wid, 0.0)
+                    + time.perf_counter() - t0)
+                if done:
+                    pipe.inflight.popleft()
+                    self._deliver(batch, pipe)
+                    progressed = True
+            if not stepped:
+                break
+        now = time.perf_counter()
+        self.stats.working_s += now - t_begin
+        dt = now - t_begin
+        if self._tick_samples == 0:
+            self.tick_latency_ewma = dt
+        else:
+            self.tick_latency_ewma = 0.3 * dt + 0.7 * self.tick_latency_ewma
+        self._tick_samples += 1
+        self._stamp_clock()
+        self._mark = None
+        return self.finished[n_fin:]
+
     # ---------------------------------------------------------------- tick
     def tick(self) -> list[QueryTicket]:
-        """One lockstep round; returns the queries that completed on it.
+        """Advance the system one round; returns queries that completed.
 
-        The whole tick — admission (stepper priming does the extended-
-        skeleton build and first reference-path search) through scatter —
-        is clocked, and completions are stamped with the POST-tick clock:
-        a query's finishing round is part of its service time.
+        Pipelined mode: one pump round (see :meth:`_tick_pipeline`) with
+        completions stamped at their actual in-pump instant.  Lockstep
+        mode: the classic global tick — the whole tick, admission
+        (stepper priming does the extended-skeleton build and first
+        reference-path search) through scatter, is clocked, and
+        completions are stamped with the POST-tick clock.
         """
+        if self.pipeline:
+            return self._tick_pipeline()
         t0 = time.perf_counter()
         n_fin = len(self.finished)
         self._admit()
@@ -283,9 +594,16 @@ class QueryScheduler:
         results: dict = {}  # k → {(gid, a, b): [(dist, path)]}
         for (wid, k), tasks in merged.items():
             self.stats.tasks_dispatched += len(tasks)
+            self.stats.batches_dispatched += 1
+            self.stats.max_inflight_batches = max(
+                self.stats.max_inflight_batches, 1)
+            tw0 = time.perf_counter()
             results.setdefault(k, {}).update(
                 self.cluster.workers[wid].execute(list(tasks), k)
             )
+            self.stats.worker_busy_s[wid] = (
+                self.stats.worker_busy_s.get(wid, 0.0)
+                + time.perf_counter() - tw0)
         # scatter: per-query segment lists, one KSP-DG step each
         still_active = []
         for tk, pair_gids in gathered:
@@ -300,6 +618,7 @@ class QueryScheduler:
         self.active = still_active
         dt = time.perf_counter() - t0
         self.clock += dt
+        self.stats.working_s += dt
         # EWMA over WORKING ticks only — idle ticks are ~free and would
         # wash the queue-delay predictor toward zero
         if self._tick_samples == 0:
@@ -352,7 +671,6 @@ class QueryScheduler:
             except QueueFull:
                 if not reject_overflow:
                     raise
-
         drive_trace(self, arrivals, submit_at, self.tick,
                     window=batch_window)
         return tickets

@@ -45,6 +45,17 @@ class SolverBackend:
 
     name: str = "abstract"
     layout: SlabLayout
+    # buffer donation for per-round scratch: None auto-enables off-CPU
+    # (CPU jax ignores donation with a warning, so backends keep it off
+    # there); True/False force.  Donated buffers MUST be fresh per round
+    # — ``SlabLayout.pack_round`` is the only sanctioned producer.
+    donate: bool | None = None
+
+    @property
+    def _donate(self) -> bool:
+        if self.donate is None:
+            return jax.default_backend() not in ("cpu",)
+        return bool(self.donate)
 
     def solve_grouped(self, adj, init, banned_v, spur_onehot, banned_next,
                       cap):
@@ -54,6 +65,11 @@ class SolverBackend:
         sources/warm starts); ``banned_v``/``spur_onehot``/
         ``banned_next`` [S,J,z] bool masks; ``cap`` [S,J] f32 distance
         caps (early termination).  All-INF padding rows must no-op.
+
+        The call is ASYNC-DISPATCHED: it returns device arrays without
+        blocking (no ``jax.block_until_ready``), so a pipelined caller
+        can overlap the device solve with host-side splicing and only
+        pay the wait when it forces the result to numpy.
         """
         raise NotImplementedError
 
@@ -67,18 +83,21 @@ class JnpBackend(SolverBackend):
     name = "jnp"
     layout = JNP_LAYOUT
 
+    def __init__(self, donate: bool | None = None):
+        self.donate = donate
+
     def solve_grouped(self, adj, init, banned_v, spur_onehot, banned_next,
                       cap):
         from .yen_engine import grouped_solver
 
         S, J, z = init.shape
-        return grouped_solver(S, J, z)(
+        return grouped_solver(S, J, z, donate=self._donate)(
             adj, init, banned_v, spur_onehot, banned_next, cap
         )
 
 
 @functools.lru_cache(maxsize=None)
-def _pallas_grouped_solver(S, J, z, interpret):
+def _pallas_grouped_solver(S, J, z, interpret, donate=False):
     """Shape-bucketed jitted Pallas fixed-point (solve + parents).
 
     The while_loop iterates the fused ``bf_relax`` kernel — which
@@ -93,7 +112,6 @@ def _pallas_grouped_solver(S, J, z, interpret):
 
     from .dense import INF, bf_parents_grouped
 
-    @jax.jit
     def run(adj, init, bv, so, bn, cap):
         so_f = so.astype(jnp.float32)
         bn_f = bn.astype(jnp.float32)
@@ -116,7 +134,11 @@ def _pallas_grouped_solver(S, J, z, interpret):
         parent = bf_parents_grouped(adj, dist, so, bn)
         return dist, parent
 
-    return run
+    if donate:
+        # per-round scratch only (init + masks + caps): the fixed-point
+        # outputs reuse their device memory instead of re-allocating
+        return jax.jit(run, donate_argnums=(1, 2, 3, 4, 5))
+    return jax.jit(run)
 
 
 class PallasBackend(SolverBackend):
@@ -131,8 +153,10 @@ class PallasBackend(SolverBackend):
     name = "pallas"
     layout = PALLAS_LAYOUT
 
-    def __init__(self, interpret: bool | None = None):
+    def __init__(self, interpret: bool | None = None,
+                 donate: bool | None = None):
         self.interpret = interpret
+        self.donate = donate
 
     @property
     def _interpret(self) -> bool:
@@ -143,6 +167,6 @@ class PallasBackend(SolverBackend):
     def solve_grouped(self, adj, init, banned_v, spur_onehot, banned_next,
                       cap):
         S, J, z = init.shape
-        return _pallas_grouped_solver(S, J, z, self._interpret)(
-            adj, init, banned_v, spur_onehot, banned_next, cap
-        )
+        return _pallas_grouped_solver(
+            S, J, z, self._interpret, donate=self._donate
+        )(adj, init, banned_v, spur_onehot, banned_next, cap)

@@ -17,7 +17,12 @@ constant.  A :class:`SlabLayout` packages it:
   per slab row) axis of a grouped solve bucket;
 * ``bucket_shape`` — the hot-row packing rule: pick the [S_pad, J_pad]
   bucket minimizing padded area, splitting rows with more jobs than
-  J_pad across duplicate slab rows.
+  J_pad across duplicate slab rows;
+* ``pack_round`` — materialize one round's jobs into FRESH scratch
+  buffers (adjacency rows copied, never aliased), which is what makes
+  ``jax.jit(donate_argnums=...)`` buffer donation safe: a donated round
+  buffer can be consumed by the solve without invalidating the worker's
+  persistent slab.
 
 ``repro.engine.backend.SolverBackend`` carries one; everything else
 (cluster slab packing, the grouped-Yen round packer) reads geometry from
@@ -28,7 +33,13 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 __all__ = ["SlabLayout", "JNP_LAYOUT", "PALLAS_LAYOUT"]
+
+# matches engine.dense.INF (finite "infinity" keeps min-plus NaN-free)
+# without importing jax here — layout is pure-host geometry
+_INF = float(3.0e38)
 
 
 def _pow2(n: int) -> int:
@@ -107,6 +118,59 @@ class SlabLayout:
             j *= 2
         _, s_pad, j_pad = best
         return s_pad, j_pad
+
+    def pack_round(self, adj, jobs, s_multiple: int = 1):
+        """Pack one grouped-solve round's jobs into fresh device buffers.
+
+        ``jobs``: [(slab_row, spur, banned_v bool[z], banned_next bool[z],
+        cap)].  Returns ``((adj_used, init, bv, so, bn, cap), slots)``
+        with ``slots[i]`` the packed (row, j) position of job ``i``; the
+        bucket shape comes from :meth:`bucket_shape` (hot rows split
+        across duplicate slab rows).
+
+        Every returned array is a FRESH scratch buffer — adjacency rows
+        are copied out of the persistent slab, never aliased — so a
+        backend may hand them to a solver jitted with
+        ``donate_argnums`` (the donated device buffers are consumed by
+        the solve) without ever invalidating the worker's slab or a
+        caller-held mask.  This is the donation-safety contract the
+        async pipeline relies on: round buffers die with the round.
+        """
+        z = adj.shape[-1]
+        counts: dict = {}
+        for row, *_ in jobs:
+            counts[row] = counts.get(row, 0) + 1
+        S_pad, J_pad = self.bucket_shape(list(counts.values()), s_multiple)
+
+        slab_rows: list[int] = []  # original slab row per packed position
+        cursor: dict = {}  # row → [packed position, jobs filled there]
+        slots = []
+        for row, *_ in jobs:
+            cur = cursor.get(row)
+            if cur is None or cur[1] == J_pad:
+                cur = [len(slab_rows), 0]
+                slab_rows.append(row)
+            slots.append((cur[0], cur[1]))
+            cur[1] += 1
+            cursor[row] = cur
+        S_ = len(slab_rows)
+
+        adj_used = np.empty((S_pad, z, z), np.float32)
+        adj_used[:S_] = adj[slab_rows]
+        adj_used[S_:] = adj[slab_rows[0]]  # filler rows; problems stay all-INF
+        init = np.full((S_pad, J_pad, z), _INF, np.float32)
+        bv = np.zeros((S_pad, J_pad, z), bool)
+        so = np.zeros((S_pad, J_pad, z), bool)
+        bn = np.zeros((S_pad, J_pad, z), bool)
+        cap = np.full((S_pad, J_pad), _INF, np.float32)
+        for (sr, j), (row, spur, banned_v, banned_next, job_cap) in zip(
+                slots, jobs):
+            init[sr, j, spur] = 0.0
+            bv[sr, j] = banned_v
+            so[sr, j, spur] = True
+            bn[sr, j] = banned_next
+            cap[sr, j] = job_cap
+        return (adj_used, init, bv, so, bn, cap), slots
 
 
 # The jnp grouped solvers want tight slabs: relaxation compute is O(z²)

@@ -53,6 +53,14 @@ class EngineSpec:
 
     name: str
     refine: Callable
+    # generator form of ``refine``: same signature, but yields once per
+    # device round with that round's solve dispatched-but-unforced, and
+    # returns the result dict as its StopIteration value.  The pipelined
+    # scheduler steps these generators round-robin so one worker's device
+    # solve overlaps another's host splicing; None = host-only engine
+    # with no device rounds to overlap (the worker completes the future
+    # synchronously).
+    refine_async: Callable | None = None
     packs_slab: bool = False
     backend: SolverBackend | None = None
     make_mesh_solver: Callable | None = None
@@ -133,11 +141,13 @@ def _pyen_refine(worker, misses, k):
     return out
 
 
-def _grouped_refine(worker, misses, k):
-    """All misses through ONE grouped [S, J, z] lockstep-Yen slab solve,
-    executed by the spec's :class:`SolverBackend` (jnp or Pallas) — or by
-    the worker's mesh solver override when one is wired."""
-    from repro.dist.grouped_yen import grouped_ksp
+def _grouped_refine_async(worker, misses, k):
+    """Generator form of :func:`_grouped_refine`: all misses through ONE
+    grouped [S, J, z] lockstep-Yen slab solve, yielding once per device
+    round with the round dispatched but not yet forced (the pipelined
+    scheduler interleaves other workers' host work into those gaps).
+    Returns the ``{(gid, a, b): [(d, path)]}`` dict."""
+    from repro.dist.grouped_yen import grouped_ksp_async
 
     dtlp = worker.dtlp
     gk_tasks = []
@@ -145,7 +155,7 @@ def _grouped_refine(worker, misses, k):
         sg = dtlp.partition.subgraphs[gid]
         gk_tasks.append((worker.row_of[gid], sg.g2l[a], sg.g2l[b]))
     worker.stats.batches += 1
-    results = grouped_ksp(
+    results = yield from grouped_ksp_async(
         worker.slab.adj, gk_tasks, k,
         solver=worker.solver, s_multiple=worker.s_multiple,
         backend=worker.spec.backend,
@@ -158,6 +168,18 @@ def _grouped_refine(worker, misses, k):
             for d, p in local
         ]
     return out
+
+
+def _grouped_refine(worker, misses, k):
+    """Synchronous driver over :func:`_grouped_refine_async`, executed by
+    the spec's :class:`SolverBackend` (jnp or Pallas) — or by the
+    worker's mesh solver override when one is wired."""
+    gen = _grouped_refine_async(worker, misses, k)
+    while True:
+        try:
+            next(gen)
+        except StopIteration as fin:
+            return fin.value
 
 
 def _dense_bf_mesh_solver(mesh, mesh_axis):
@@ -184,6 +206,7 @@ register_engine(EngineSpec(
 register_engine(EngineSpec(
     name="dense_bf",
     refine=_grouped_refine,
+    refine_async=_grouped_refine_async,
     packs_slab=True,
     backend=JnpBackend(),
     make_mesh_solver=_dense_bf_mesh_solver,
@@ -196,6 +219,7 @@ register_engine(EngineSpec(
 register_engine(EngineSpec(
     name="pallas_bf",
     refine=_grouped_refine,
+    refine_async=_grouped_refine_async,
     packs_slab=True,
     backend=PallasBackend(),
     description="fused Pallas bf_relax fixed point over 128-lane slabs "

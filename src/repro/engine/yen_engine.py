@@ -59,20 +59,30 @@ def _jit_solver(P, z):
 
 
 @functools.lru_cache(maxsize=None)
-def grouped_solver(S, J, z):
+def grouped_solver(S, J, z, donate: bool = False):
     """Shape-bucketed jitted grouped (solve + parents) over the
     owner-aligned [S, J, z] slab layout: J spur problems per subgraph
     relaxed against adj [S, z, z] with zero gather.  The distributed
     dense worker path (repro.dist.grouped_yen) dispatches through this;
-    callers bucket S and J so varying batch shapes reuse compilations."""
+    callers bucket S and J so varying batch shapes reuse compilations.
 
-    @jax.jit
+    ``donate=True`` marks every per-round scratch buffer (all arguments
+    except the adjacency) as donated via ``donate_argnums``, so on
+    device backends XLA reuses their memory for the [S, J, z] outputs
+    instead of allocating fresh — the recopy-avoidance half of the async
+    pipeline.  Callers must only donate buffers packed fresh for the
+    round (``SlabLayout.pack_round`` guarantees this); donation is a
+    no-op on CPU, where backends leave it off.
+    """
+
     def run(adj, init, bv, so, bn, cap):
         dist, _ = bf_solve_grouped(adj, init, bv, so, bn, cap=cap)
         parent = bf_parents_grouped(adj, dist, so, bn)
         return dist, parent
 
-    return run
+    if donate:
+        return jax.jit(run, donate_argnums=(1, 2, 3, 4, 5))
+    return jax.jit(run)
 
 
 def _spur_batch(adj_np, jobs, warm=None, caps=None):

@@ -86,7 +86,8 @@ class KSPService:
         self.scheduler = QueryScheduler(
             cluster, max_in_flight=cfg.max_in_flight,
             max_queue=cfg.max_queue, max_iterations=cfg.max_iterations,
-            ref_stream=cfg.ref_stream,
+            ref_stream=cfg.ref_stream, pipeline=cfg.pipeline,
+            pipeline_depth=cfg.pipeline_depth,
         )
         self.stats = ServiceStats()
         self._qid = itertools.count()

@@ -168,6 +168,14 @@ class ServiceConfig:
     # ``repro.core.refstream`` name ("lazy" / "yen"); None inherits the
     # engine spec's default ("lazy" for all builtin engines)
     ref_stream: str | None = None
+    # per-worker asynchronous pipelines (the serving default): device
+    # solves overlap host splicing and finished queries resolve
+    # immediately; False reverts to the global lockstep tick (the
+    # reference schedule — answers are byte-identical either way)
+    pipeline: bool = True
+    # dispatched-but-unforced batches each worker pipe may hold (2 =
+    # double-buffered: one solving on device, one filling on host)
+    pipeline_depth: int = 2
 
     def __post_init__(self):
         from repro.core.refstream import get_ref_stream
@@ -180,6 +188,8 @@ class ServiceConfig:
             raise ValueError("n_workers must be ≥ 1")
         if self.max_in_flight < 1:
             raise ValueError("max_in_flight must be ≥ 1")
+        if self.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be ≥ 1")
 
 
 @dataclasses.dataclass
