@@ -1,0 +1,197 @@
+"""Sustained live updates: query latency and update-visibility lag
+under a Poisson weight-update feed, barrier vs streaming epoch handoff.
+
+Each leg drives one :class:`KSPService` through the same interleaved
+trace — queries stream in one per service round, and between rounds a
+Poisson-distributed number of :class:`UpdateBatch`es (mean
+``updates_per_query``) lands with ``wait=False``, exactly how a live
+feed arrives.  Reported per (mode, rate): query p50/p95, update
+batches applied/coalesced, handoff waits vs admission-freeze ticks,
+and the update-visibility lag (enqueue → committed epoch, on the
+scheduler clock).
+
+``--mixed`` draws k per query from {2, 3, 5} instead of fixed k=3 (the
+mixed-cohort workload that makes drain barriers expensive: a frozen
+admission queue waits on the slowest in-flight cohort).
+
+``--smoke`` doubles as the CI regression gate: it FAILS (exit 1) when
+
+* streaming p95 under the update feed exceeds 1.5x the idle
+  (no-update) p95 — the whole point of the epoch handoff is that a
+  sustained feed must not stall queries, or
+* streaming answers diverge from barrier answers for any query that
+  observed the same epoch in both runs (byte-level paths; both legs
+  replay the identical trace).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.data.roadnet import WeightUpdateStream
+from repro.service import (
+    KSPService,
+    QueryRequest,
+    ServiceConfig,
+    UpdateBatch,
+)
+
+from .common import build_network, emit, rand_queries
+
+K_MIXED = (2, 3, 5)
+
+
+def run_leg(net, mode, updates_per_query, n_queries, *, engine="dense_bf",
+            workers=4, mixed=False, seed=0, alpha=0.1, tau=0.2):
+    """One service run; returns (stats row, {qid: (epoch, paths)}).
+
+    Builds a FRESH network per run: updates mutate the graph in place,
+    so sharing one across legs would leak weight drift and epoch
+    counters from leg to leg.
+    """
+    g, z = build_network(net, quick=True)
+    cfg = ServiceConfig(
+        engine=engine, n_workers=workers, z=z, xi=4,
+        update_mode=mode, rebaseline_drift=0.0,
+    )
+    svc = KSPService.build(g, cfg)
+    stream = WeightUpdateStream(g, alpha=alpha, tau=tau, seed=11)
+    rng = np.random.default_rng(seed)  # drives ONLY the feed shape
+    qs = rand_queries(g, n_queries, seed=5)
+    ks = ([int(rng.choice(K_MIXED)) for _ in qs] if mixed
+          else [3] * len(qs))
+    # untimed warmup: one query per k-shape so device-engine compiles
+    # land outside the percentiles (they'd dominate the first leg's p95)
+    ws, wt = rand_queries(g, 1, seed=17)[0]
+    for k in sorted(set(ks)):
+        svc.query(ws, wt, k)
+    done = []
+    t0 = time.perf_counter()
+    for (s, t), k in zip(qs, ks):
+        svc.submit(QueryRequest(s, t, k))
+        for _ in range(int(rng.poisson(updates_per_query))):
+            svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+        done.extend(svc.tick())
+    done.extend(svc.drain())
+    wall = time.perf_counter() - t0
+    lat = np.array([tk.result.latency_ms for tk in done
+                    if tk.result is not None])
+    lags = np.asarray(svc.update_lags) * 1e3
+    row = dict(
+        mode=mode, engine=engine,
+        updates_per_query=updates_per_query,
+        n_queries=len(lat), mixed=mixed,
+        p50_ms=round(float(np.percentile(lat, 50)), 2),
+        p95_ms=round(float(np.percentile(lat, 95)), 2),
+        qps=round(len(lat) / wall, 2),
+        final_epoch=svc.epoch,
+        update_batches=svc.stats.update_batches,
+        coalesced=svc.stats.coalesced_batches,
+        handoff_waits=svc.stats.handoff_waits,
+        barrier_ticks=svc.stats.barrier_ticks,
+        lag_mean_ms=(round(float(lags.mean()), 2) if lags.size else 0.0),
+        lag_p95_ms=(round(float(np.percentile(lags, 95)), 2)
+                    if lags.size else 0.0),
+    )
+    results = {tk.qid: (tk.result.epoch, tuple(tk.result.paths))
+               for tk in done if tk.result is not None}
+    return row, results
+
+
+def _best_of(net, mode, rate, n_queries, repeat, **kw):
+    """Latency percentiles are wall-time: gate on the best of ``repeat``
+    runs (same trace every time) so one noisy CI run cannot flake."""
+    best_row, results = None, None
+    for _ in range(repeat):
+        row, res = run_leg(net, mode, rate, n_queries, **kw)
+        if best_row is None or row["p95_ms"] < best_row["p95_ms"]:
+            best_row, results = row, res
+    return best_row, results
+
+
+def bench_update(quick=True, smoke=False, engine="dense_bf", mixed=False):
+    net = "NY-s" if (quick or smoke) else "COL-s"
+    n_queries = 16 if (smoke or quick) else 24
+    repeat = 3 if smoke else 2
+    rates = ([0.0, 0.5] if smoke
+             else ([0.0, 0.5, 2.0] if quick
+                   else [0.0, 0.25, 0.5, 1.0, 2.0]))
+    mixed = mixed or smoke  # the gate needs the expensive-drain workload
+    # one throwaway leg first: concurrent-cohort jit shapes compile here,
+    # not inside the first measured leg's percentiles
+    run_leg(net, "streaming", 0.5, max(6, n_queries // 2),
+            engine=engine, mixed=mixed)
+    rows = []
+    by_mode = {}
+    for mode in ("barrier", "streaming"):
+        for rate in rates:
+            row, results = _best_of(net, mode, rate, n_queries, repeat,
+                                    engine=engine, mixed=mixed)
+            rows.append(row)
+            by_mode[(mode, rate)] = (row, results)
+            print(f"  {mode:9s} feed={rate:5.3f}: "
+                  f"p50 {row['p50_ms']:7.1f}ms p95 {row['p95_ms']:7.1f}ms "
+                  f"lag p95 {row['lag_p95_ms']:6.1f}ms "
+                  f"(batches {row['update_batches']}, "
+                  f"coalesced {row['coalesced']}, "
+                  f"freezes {row['barrier_ticks']})", flush=True)
+    emit("update", rows)
+
+    if smoke:
+        feed = rates[-1]
+        # the two idle legs measure the SAME update-free service (the
+        # mode switch is dead code without updates): their spread is
+        # pure timing noise, so baseline on the larger of the two
+        idle_p95 = max(by_mode[("streaming", 0.0)][0]["p95_ms"],
+                       by_mode[("barrier", 0.0)][0]["p95_ms"])
+        feed_p95 = by_mode[("streaming", feed)][0]["p95_ms"]
+        if feed_p95 > 1.5 * idle_p95:
+            raise SystemExit(
+                f"smoke gate FAILED: streaming p95 under the update feed "
+                f"({feed_p95:.1f}ms) exceeds 1.5x the idle p95 "
+                f"({idle_p95:.1f}ms) — the epoch handoff is stalling "
+                f"queries it exists to keep moving"
+            )
+        print(f"smoke gate OK: streaming p95 idle {idle_p95:.1f}ms → "
+              f"{feed_p95:.1f}ms under feed (≤ 1.5x)")
+        # epoch-matched equivalence: identical trace, identical answers
+        res_b = by_mode[("barrier", feed)][1]
+        res_s = by_mode[("streaming", feed)][1]
+        matched = divergent = 0
+        for qid in set(res_b) & set(res_s):
+            (eb, pb), (es, ps) = res_b[qid], res_s[qid]
+            if eb == es:
+                matched += 1
+                if pb != ps:
+                    divergent += 1
+        if divergent or matched == 0:
+            raise SystemExit(
+                f"smoke gate FAILED: {divergent} of {matched} epoch-"
+                f"matched queries diverge between barrier and streaming "
+                f"(byte-level paths must be identical)"
+            )
+        print(f"smoke gate OK: {matched} epoch-matched queries "
+              f"byte-identical across barrier/streaming")
+    return rows
+
+
+def main(quick=True, smoke=False, engine="dense_bf", mixed=False):
+    bench_update(quick=quick, smoke=smoke, engine=engine, mixed=mixed)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", default="dense_bf")
+    ap.add_argument("--mixed", action="store_true",
+                    help="draw k per query from {2,3,5}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: fail on feed-stall or barrier/"
+                    "streaming divergence at matching epochs")
+    a = ap.parse_args()
+    main(quick=not a.full, smoke=a.smoke, engine=a.engine, mixed=a.mixed)

@@ -24,6 +24,7 @@ def main() -> None:
         bench_engine,
         bench_query,
         bench_scaleout,
+        bench_update,
     )
 
     suites = {
@@ -33,6 +34,8 @@ def main() -> None:
         "scaleout": bench_scaleout.main,    # paper Fig 18
         "engine": bench_engine.main,        # TPU data plane micro-bench
         "batch": bench_batch.main,          # cross-query batched serving
+        "update": bench_update.main,        # live-update feed: barrier vs
+                                            # streaming epoch handoff
     }
     t0 = time.time()
     for name, fn in suites.items():

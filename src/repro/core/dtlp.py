@@ -26,7 +26,7 @@ from .bounding import (
     unit_weight_profile,
 )
 from .ebp import EBPII
-from .graph import Graph
+from .graph import Graph, dedupe_updates
 from .lsh import lsh_groups, minhash_signatures
 from .mptree import GMPTree
 from .partition import Partition, Subgraph, partition_graph
@@ -81,6 +81,12 @@ class SkeletonGraph:
         self.contrib_edge: np.ndarray | None = None
         self.contrib_sub: np.ndarray | None = None
         self.contrib_pair: np.ndarray | None = None
+        # delta-scoped refresh state: per-contribution LBD values as of
+        # the last refresh, plus an edge → contributions CSR (built
+        # lazily on first partial refresh)
+        self._contrib_vals: np.ndarray | None = None
+        self._edge_contrib_ptr: np.ndarray | None = None
+        self._edge_contrib_idx: np.ndarray | None = None
         self._view: CSRView | None = None
         self._view_version = -1
         self._version = 0
@@ -130,6 +136,73 @@ class SkeletonGraph:
             vals[mask] = si.lbd[self.contrib_pair[mask]]
         self.weight.fill(INF)
         np.minimum.at(self.weight, self.contrib_edge, vals)
+        self._contrib_vals = vals
+        self._version += 1
+
+    # ------------------------------------------------- delta-scoped refresh
+    def _contrib_csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """Lazy edge → contribution-index CSR (topology-fixed)."""
+        if self._edge_contrib_ptr is None:
+            order = np.argsort(self.contrib_edge, kind="stable")
+            counts = np.bincount(self.contrib_edge,
+                                 minlength=self.weight.shape[0])
+            ptr = np.zeros(self.weight.shape[0] + 1, dtype=np.int64)
+            np.cumsum(counts, out=ptr[1:])
+            self._edge_contrib_ptr = ptr
+            self._edge_contrib_idx = order.astype(np.int64)
+        return self._edge_contrib_ptr, self._edge_contrib_idx
+
+    def plan_partial_refresh(self, new_lbds: dict):
+        """Stage a delta-scoped weight refresh WITHOUT mutating state.
+
+        ``new_lbds`` maps touched gid → that subgraph's post-update LBD
+        array.  Only skeleton edges carrying a contribution from a
+        touched subgraph are recomputed; their new value is the min over
+        the edge's FULL contribution set (new LBDs for touched
+        subgraphs, the stored ``_contrib_vals`` for the rest) — bitwise
+        what a wholesale ``refresh_weights`` would produce, since min
+        over the same float set is order-independent.
+
+        Returns ``(affected_edges, new_edge_w, changes, touched_idx,
+        touched_vals)`` where ``changes`` is ``[(u, v, old, new)]`` in
+        skeleton vertex ids for edges whose weight actually moved, and
+        the last two arrays are the contribution-value writes
+        ``commit_partial_refresh`` applies.
+        """
+        if self.contrib_edge is None or self._contrib_vals is None:
+            empty = np.empty(0, dtype=np.int64)
+            return empty, np.empty(0), [], empty, np.empty(0)
+        ptr, idx = self._contrib_csr()
+        t_parts = []
+        v_parts = []
+        for gid, lbd in new_lbds.items():
+            m = np.nonzero(self.contrib_sub == int(gid))[0]
+            t_parts.append(m)
+            v_parts.append(lbd[self.contrib_pair[m]])
+        touched_idx = (np.concatenate(t_parts) if t_parts
+                       else np.empty(0, dtype=np.int64))
+        touched_vals = np.concatenate(v_parts) if v_parts else np.empty(0)
+        staged = self._contrib_vals.copy()
+        staged[touched_idx] = touched_vals
+        # per-edge min over the full contribution set (every skeleton
+        # edge has ≥ 1 contribution, so no empty reduceat segments)
+        per_edge = np.minimum.reduceat(staged[idx], ptr[:-1])
+        affected = np.unique(self.contrib_edge[touched_idx])
+        new_edge_w = per_edge[affected]
+        moved = affected[new_edge_w != self.weight[affected]]
+        changes = [
+            (int(self.edge_i[e]), int(self.edge_j[e]),
+             float(self.weight[e]), float(per_edge[e]))
+            for e in moved
+        ]
+        return affected, new_edge_w, changes, touched_idx, touched_vals
+
+    def commit_partial_refresh(self, affected, new_edge_w,
+                               touched_idx, touched_vals) -> None:
+        """Apply a staged partial refresh: pure array writes + version
+        bump (the streaming path's pointer-swap moment)."""
+        self._contrib_vals[touched_idx] = touched_vals
+        self.weight[affected] = new_edge_w
         self._version += 1
 
     def view(self) -> CSRView:
@@ -152,6 +225,30 @@ class SkeletonGraph:
         self._view = CSRView(n, indptr, h_dst[order], h_w[order])
         self._view_version = self._version
         return self._view
+
+
+@dataclasses.dataclass
+class UpdatePlan:
+    """Everything one update batch will change, staged off to the side.
+
+    ``DTLP.prepare_updates`` computes the plan against live state
+    without mutating it — queries keep serving the current epoch while
+    the plan is built — and ``DTLP.commit_updates`` installs it as
+    pointer swaps + a handful of array writes (the epoch handoff).
+    """
+
+    eids: np.ndarray  # deduped (last-write-wins)
+    new_w: np.ndarray
+    w_next: np.ndarray  # full post-commit weight buffer
+    # per touched gid: (gid, path_D, path_BD, profile, lbd)
+    sub_updates: list
+    # staged skeleton partial refresh (plan_partial_refresh output)
+    skel_affected: np.ndarray
+    skel_new_w: np.ndarray
+    skel_changes: list  # [(u, v, old, new)] skeleton vertex ids
+    skel_touched_idx: np.ndarray
+    skel_touched_vals: np.ndarray
+    prepare_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -256,11 +353,26 @@ class DTLP:
                    lbd_mode, stats, z=int(z))
 
     # ------------------------------------------------------- maintenance
-    def apply_updates(self, eids: np.ndarray, new_w: np.ndarray) -> float:
-        """Apply a weight-update batch; returns maintenance seconds."""
+    def apply_updates(self, eids: np.ndarray, new_w: np.ndarray, *,
+                      incremental: bool = True) -> float:
+        """Apply a weight-update batch; returns maintenance seconds.
+
+        ``incremental=True`` (default) runs the delta-scoped path —
+        ``prepare_updates`` + ``commit_updates``: only touched subgraph
+        indexes rebuild their bounds, only affected skeleton edges
+        recompute, and the lazy reference-tree cache is repaired instead
+        of dropped.  ``incremental=False`` is the wholesale reference
+        path (full ``refresh_weights``, cache invalidated outright) the
+        equivalence oracle replays against; both produce bit-identical
+        bounds, skeleton weights and reference streams.
+        """
+        if incremental:
+            plan = self.prepare_updates(eids, new_w)
+            t0 = time.perf_counter()
+            self.commit_updates(plan)
+            return plan.prepare_s + (time.perf_counter() - t0)
         t0 = time.perf_counter()
-        eids = np.asarray(eids, dtype=np.int64)
-        new_w = np.asarray(new_w, dtype=np.float64)
+        eids, new_w = dedupe_updates(eids, new_w)
         delta = new_w - self.graph.w[eids]
         self.graph.apply_updates(eids, new_w)
         owners = self.edge_owner[eids]
@@ -273,6 +385,88 @@ class DTLP:
         if touched.shape[0]:
             self.skeleton.refresh_weights(self.sub_indexes)
         return time.perf_counter() - t0
+
+    def prepare_updates(self, eids: np.ndarray,
+                        new_w: np.ndarray) -> UpdatePlan:
+        """Stage one update batch's full effect WITHOUT mutating state.
+
+        Runs the same float operations, in the same order, as the
+        wholesale path — per-path D deltas (EBP-II/G-MPTree lookups),
+        per-touched-subgraph profile/BD/LBD recompute from the future
+        weight buffer — but into shadow arrays, so epoch-*e* queries
+        keep executing against untouched state while epoch *e+1* is
+        prepared.  The batch is deduped last-write-wins first (a
+        repeated eid must not double-count its delta).
+        """
+        t0 = time.perf_counter()
+        eids, new_w = dedupe_updates(eids, new_w)
+        g = self.graph
+        delta = new_w - g.w[eids]
+        w_next = g.w.copy()
+        w_next[eids] = new_w
+        owners = self.edge_owner[eids]
+        touched = np.unique(owners[owners >= 0])
+        sub_updates = []
+        new_lbds: dict = {}
+        for gid in touched:
+            si = self.sub_indexes[gid]
+            mask = owners == gid
+            D = si.path_D.copy()
+            for e, dw in zip(eids[mask], delta[mask]):
+                pids = si.storage.paths_containing(int(e))
+                if pids.shape[0]:
+                    D[pids] += dw
+            profile = unit_weight_profile(
+                w_next[si.sg.edges], g.vfrag[si.sg.edges]
+            )
+            BD = bound_distances(profile, si.path_phi)
+            lbd = lower_bound_distances_vec(
+                si.pair_ptr, D, BD, mode=self.lbd_mode
+            )
+            sub_updates.append((int(gid), D, BD, profile, lbd))
+            new_lbds[int(gid)] = lbd
+        affected, skel_new_w, changes, t_idx, t_vals = (
+            self.skeleton.plan_partial_refresh(new_lbds)
+        )
+        return UpdatePlan(
+            eids=eids, new_w=new_w, w_next=w_next,
+            sub_updates=sub_updates, skel_affected=affected,
+            skel_new_w=skel_new_w, skel_changes=changes,
+            skel_touched_idx=t_idx, skel_touched_vals=t_vals,
+            prepare_s=time.perf_counter() - t0,
+        )
+
+    def commit_updates(self, plan: UpdatePlan) -> None:
+        """Install a staged :class:`UpdatePlan`: the epoch handoff.
+
+        Pointer swaps and array writes only — no recomputation.  The
+        graph's previous weight buffer survives one epoch (``w_at``),
+        the reference-tree cache is repaired in place (trees the changed
+        skeleton edges provably miss are carried over copy-on-write,
+        the rest rebuild on demand), and the skeleton version bump makes
+        every new ``view()`` see the fresh weights while views already
+        captured by in-flight steppers stay untouched.
+        """
+        self.graph.apply_updates(plan.eids, plan.new_w)
+        for gid, D, BD, profile, lbd in plan.sub_updates:
+            si = self.sub_indexes[gid]
+            si.path_D = D
+            si.path_BD = BD
+            si.profile = profile
+            si.lbd = lbd
+        if plan.sub_updates:
+            self.skeleton.commit_partial_refresh(
+                plan.skel_affected, plan.skel_new_w,
+                plan.skel_touched_idx, plan.skel_touched_vals,
+            )
+            if self._ref_trees is not None and len(self._ref_trees):
+                self._ref_trees.repair(plan.skel_changes,
+                                       self.skeleton.view())
+            # re-key: the repaired cache IS valid for the new skeleton
+            # state (wholesale refreshes leave the key stale on purpose,
+            # so ref_tree_cache drops the cache there)
+            self._ref_trees_key = (id(self.skeleton),
+                                   self.skeleton._version)
 
     # ----------------------------------------------------------- helpers
     @property

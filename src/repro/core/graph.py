@@ -31,6 +31,27 @@ class Snapshot:
     w: np.ndarray  # float64[E] logical-edge weights
 
 
+def dedupe_updates(
+    eids: np.ndarray, new_w: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Last-write-wins de-duplication of one Δw batch.
+
+    A batch repeating an eid must behave as if only its final value were
+    present: incremental maintenance computes per-edge deltas against the
+    pre-batch weights, so a duplicated eid would otherwise double-count
+    its delta (``DTLP.apply_updates`` feeds ``update_actual_distances``).
+    Output is one entry per unique eid; order is preserved when the
+    batch is already duplicate-free.
+    """
+    eids = np.asarray(eids, dtype=np.int64)
+    new_w = np.asarray(new_w, dtype=np.float64)
+    uniq, first_rev = np.unique(eids[::-1], return_index=True)
+    if uniq.shape[0] == eids.shape[0]:
+        return eids, new_w
+    last = eids.shape[0] - 1 - first_rev  # last occurrence per unique eid
+    return eids[last], new_w[last]
+
+
 class Graph:
     def __init__(
         self,
@@ -58,6 +79,12 @@ class Graph:
         self.w = w0.copy()
         self.vfrag = np.maximum(1, np.rint(w0)).astype(np.int64)
         self._version = 0
+        # double-buffered epochs: the previous epoch's full weight
+        # buffer, kept alive across exactly one update commit so
+        # in-flight queries admitted at epoch e can still be refined
+        # against e's weights while e+1 serves new admissions
+        self._prev_w: np.ndarray | None = None
+        self._prev_version = -1
         self._build_csr()
 
     # ------------------------------------------------------------------ CSR
@@ -92,13 +119,36 @@ class Graph:
         return self.w / self.vfrag
 
     def apply_updates(self, eids: np.ndarray, new_w: np.ndarray) -> None:
-        """Apply a batch of weight changes (the Δw stream)."""
+        """Apply a batch of weight changes (the Δw stream).
+
+        The pre-batch weight buffer survives as the previous epoch's
+        (``w_at``) until the next batch lands — the fence the streaming
+        update path relies on to keep epoch-e queries refinable after
+        the e+1 swap commits.
+        """
         eids = np.asarray(eids, dtype=np.int64)
         new_w = np.asarray(new_w, dtype=np.float64)
         if np.any(new_w <= 0):
             raise ValueError("updated weights must stay positive")
+        self._prev_w = self.w.copy()
+        self._prev_version = self._version
         self.w[eids] = new_w
         self._version += 1
+
+    def w_at(self, epoch: int) -> np.ndarray:
+        """The weight buffer of ``epoch`` — current or the one epoch the
+        double buffer retains.  Anything older is unreachable (raises):
+        the streaming commit gate guarantees no in-flight query lags by
+        more than one epoch."""
+        epoch = int(epoch)
+        if epoch == self._version:
+            return self.w
+        if epoch == self._prev_version and self._prev_w is not None:
+            return self._prev_w
+        raise KeyError(
+            f"epoch {epoch} weights unavailable (current {self._version}, "
+            f"buffered {self._prev_version})"
+        )
 
     def snapshot(self) -> Snapshot:
         return Snapshot(version=self._version, w=self.w.copy())

@@ -59,6 +59,15 @@ __all__ = [
 # weight-tie tolerance shared with the stepper's stop rule
 TIE_EPS = 1e-9
 
+# incremental SPT repair margin: a changed skeleton edge leaves a cached
+# tree's reverse SPT provably intact only when its detour cost δ stays
+# strictly positive (by more than every epsilon the Dijkstra uses for
+# strict-improvement and staleness checks) both BEFORE and AFTER the
+# change — otherwise the edge is, or could become, a tree edge and the
+# parent structure is relax-order dependent, so the tree is evicted and
+# rebuilt from scratch on next use (which is trivially bit-identical)
+REPAIR_EPS = 1e-6
+
 
 class TreeCache:
     """Bounded LRU of per-target :class:`SidetrackTree`s.
@@ -95,6 +104,26 @@ class TreeCache:
 
     def __len__(self) -> int:
         return len(self.data)
+
+    def repair(self, changes, view: CSRView) -> tuple[int, int]:
+        """Incrementally carry cached trees across one skeleton weight
+        refresh.  ``changes`` is ``[(u, v, old_w, new_w)]`` in skeleton
+        vertex ids; ``view`` is the POST-change CSR.  Trees the changes
+        provably do not touch are replaced by repaired copies (shared
+        reverse SPT, dirty sidetrack lists dropped — see
+        :meth:`SidetrackTree.repaired`); the rest are evicted and
+        rebuild on demand.  Returns ``(kept, evicted)``.
+        """
+        kept = evicted = 0
+        for t in list(self.data):
+            rep = self.data[t].repaired(changes, view)
+            if rep is None:
+                del self.data[t]
+                evicted += 1
+            else:
+                self.data[t] = rep
+                kept += 1
+        return kept, evicted
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +176,7 @@ class SidetrackTree:
     def __init__(self, view: CSRView, t: int, directed: bool = False):
         self.view = view
         self.t = int(t)
+        self.directed = bool(directed)
         d, nxt = reverse_spt(view, self.t, directed)
         self.d = d
         self.nxt = nxt
@@ -158,6 +188,55 @@ class SidetrackTree:
         # H(v) = sidetrack chain heads of every vertex on the tree path
         # v→t, built lazily along parent chains with structure sharing
         self._heaps: dict[int, _HeapNode | None] = {}
+
+    def repaired(self, changes, view: CSRView) -> "SidetrackTree | None":
+        """A copy of this tree valid for ``view`` (the post-change
+        skeleton), or ``None`` when the changes may touch the tree.
+
+        Soundness: for every changed edge (u, v) — both orientations on
+        undirected skeletons — whose head is reachable, we require the
+        detour cost δ = w + d[head] − d[tail] to exceed ``REPAIR_EPS``
+        at BOTH the old and new weight.  Then the edge was a strict
+        non-tree sidetrack before and stays one after, so the reverse
+        SPT's ``d``/``nxt`` match what a fresh Dijkstra on ``view``
+        would produce (the tree-edge set and all distances are
+        untouched, tie cases excluded by the margin), and only the tail
+        vertices' sidetrack δ values move — those lists are dropped and
+        rebuilt lazily against the new view.
+
+        Copy-on-write: the original tree object is never mutated —
+        in-flight ``walks()`` generators read ``_S``/``_heaps`` live and
+        must keep streaming the OLD epoch's references unperturbed.
+        """
+        d = self.d
+        dirty: set[int] = set()
+        for u, v, old_w, new_w in changes:
+            pairs = ((u, v),) if self.directed else ((u, v), (v, u))
+            for a, b in pairs:
+                if not np.isfinite(d[b]):
+                    continue
+                if not np.isfinite(d[a]):
+                    # the tail was unreachable; a newly-finite edge
+                    # weight would connect it and grow the tree
+                    if np.isfinite(new_w):
+                        return None
+                    continue
+                slack = float(d[b]) - float(d[a])
+                if min(old_w, new_w) + slack <= REPAIR_EPS:
+                    return None
+                dirty.add(int(a))
+        clone = SidetrackTree.__new__(SidetrackTree)
+        clone.view = view
+        clone.t = self.t
+        clone.directed = self.directed
+        clone.d = d
+        clone.nxt = self.nxt
+        clone._S = [None if u in dirty else su
+                    for u, su in enumerate(self._S)]
+        # heaps are a deterministic function of the sidetrack lists and
+        # the (unchanged) tree structure; rebuild lazily where needed
+        clone._heaps = {} if dirty else dict(self._heaps)
+        return clone
 
     def sidetracks(self, u: int) -> list[tuple[float, int]]:
         """Sidetrack edges out of ``u``: [(δ, head)], ascending by δ.

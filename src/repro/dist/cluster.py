@@ -197,6 +197,10 @@ class Worker:
         self.s_multiple = int(s_multiple)
         self.epoch = dtlp.epoch
         self.pending: list[np.ndarray] = []  # eid batches missed while dead
+        # double-buffered epochs (streaming updates): the slab of the
+        # previous epoch survives one commit so queries fenced at epoch
+        # e keep solving against e's weights while e+1 serves new ones
+        self.prev_slab = None
         # per-subgraph refine-cost proxy (THE shared formula the LPT
         # placer balances): normalizes observed task latency so owning
         # BIG subgraphs doesn't read as straggling
@@ -220,14 +224,20 @@ class Worker:
             self.row_of = {int(g): i for i, g in enumerate(self.slab.gids)}
 
     # ------------------------------------------------------------- refine
-    def execute_async(self, tasks, k: int) -> SolveFuture:
+    def execute_async(self, tasks, k: int,
+                      epoch: int | None = None) -> SolveFuture:
         """Non-blocking form of :meth:`execute`: partition cache hits up
         front, then hand back a :class:`SolveFuture` whose ``step()``
         advances the engine's refine generator one device round at a
         time.  All-hit batches (and host-only engines, which have no
         device rounds to overlap) come back already done.
+
+        ``epoch`` requests a specific serving epoch (streaming updates:
+        a query admitted at epoch *e* must be refined against *e*'s
+        weights even after the *e+1* swap commits); ``None`` means the
+        current graph epoch, the barrier-mode behavior.
         """
-        epoch = self.ensure_epoch()
+        epoch = self.ensure_epoch(epoch)
         out: dict = {}
         misses = []
         for gid, a, b in tasks:
@@ -247,41 +257,88 @@ class Worker:
             # round-trips are ~free and would wash the EWMA with noise)
             fut = SolveFuture(self, epoch, k, out, misses, None)
             t0 = time.perf_counter()
-            solved = self.spec.refine(self, misses, k)
+            solved = self.spec.refine(self, misses, k, epoch)
             fut._host_s = time.perf_counter() - t0
             fut._finish(solved)
             return fut
-        gen = self.spec.refine_async(self, misses, k)
+        gen = self.spec.refine_async(self, misses, k, epoch)
         return SolveFuture(self, epoch, k, out, misses, gen)
 
-    def execute(self, tasks, k: int) -> dict:
+    def execute(self, tasks, k: int, epoch: int | None = None) -> dict:
         """tasks: [(gid, a, b)] with global vertex ids, all owned here.
 
         Returns {(gid, a, b): [(dist, global-path-tuple)], ...}.
         Synchronous drain of :meth:`execute_async` — one implementation,
         two schedules.
         """
-        fut = self.execute_async(tasks, k)
+        fut = self.execute_async(tasks, k, epoch)
         while not fut.step():
             pass
         return fut.result()
 
-    def ensure_epoch(self) -> int:
+    def ensure_epoch(self, requested: int | None = None) -> int:
         """Refuse-or-resync epoch gate: the only way into ``execute``.
 
-        Returns the current graph epoch after guaranteeing this worker's
-        slab matches it.  Serving stale weights is structurally
-        impossible: the partial-KSP cache is keyed by epoch, and the slab
-        is re-patched here before any solve.
+        With ``requested=None`` (barrier mode) guarantees this worker's
+        slab matches the CURRENT graph epoch — a live-but-stale worker
+        re-syncs, a dead one raises.  With an explicit ``requested``
+        epoch (streaming fence), the worker may also serve exactly one
+        epoch behind from its double buffer (``prev_slab`` /
+        ``Graph.w_at``); anything it cannot reach bit-exactly raises
+        :class:`StaleReplicaError`.  Serving wrong-epoch weights is
+        structurally impossible either way: the partial-KSP cache is
+        keyed by epoch and the slab buffers carry their epoch stamps.
         """
         epoch = self.dtlp.epoch
         if not self.alive:
             raise StaleReplicaError(
-                f"worker {self.wid} is dead and cannot serve epoch {epoch}"
+                f"worker {self.wid} is dead and cannot serve epoch "
+                f"{epoch if requested is None else requested}"
             )
-        if self.epoch != epoch:
-            self.resync()
-        return epoch
+        if requested is None or requested == epoch:
+            if self.epoch != epoch:
+                self.resync()
+            return epoch
+        # an older epoch: slab engines serve it from the double buffer
+        # (or a not-yet-patched slab still exactly at that epoch); host
+        # engines read the graph's retained previous weight buffer
+        if self.slab is None:
+            try:
+                self.dtlp.graph.w_at(requested)
+            except KeyError:
+                raise StaleReplicaError(
+                    f"worker {self.wid} cannot reach epoch {requested} "
+                    f"(graph at {epoch})"
+                ) from None
+            return int(requested)
+        if (self.slab.epoch == requested
+                or (self.prev_slab is not None
+                    and self.prev_slab.epoch == requested)):
+            return int(requested)
+        raise StaleReplicaError(
+            f"worker {self.wid} cannot serve epoch {requested}: slab at "
+            f"{self.slab.epoch}, previous "
+            f"{None if self.prev_slab is None else self.prev_slab.epoch}"
+        )
+
+    def slab_for(self, epoch: int):
+        """The slab buffer packed at ``epoch`` (current or previous)."""
+        if self.slab is not None and self.slab.epoch == epoch:
+            return self.slab
+        if self.prev_slab is not None and self.prev_slab.epoch == epoch:
+            return self.prev_slab
+        raise StaleReplicaError(
+            f"worker {self.wid} holds no slab for epoch {epoch}"
+        )
+
+    def weights_for(self, epoch: int):
+        """The logical-edge weight buffer of ``epoch`` (host engines)."""
+        try:
+            return self.dtlp.graph.w_at(epoch)
+        except KeyError:
+            raise StaleReplicaError(
+                f"worker {self.wid} holds no weights for epoch {epoch}"
+            ) from None
 
     def resync(self) -> None:
         """Replay missed update batches into the slab, advance the epoch."""
@@ -306,9 +363,37 @@ class Worker:
         if self.slab is not None:
             self.slab.epoch = self.epoch
 
-    def _patch(self, eids: np.ndarray) -> None:
-        """Re-patch this worker's slab entries touched by updated edges."""
+    def prepare_patch(self, eids: np.ndarray, w_next: np.ndarray):
+        """Stage epoch-*e+1* slab contents in a shadow buffer while this
+        worker keeps serving epoch *e* from its live slab.  ``w_next`` is
+        the post-batch logical weight buffer (the graph itself is still
+        at *e* when this runs).  Returns the shadow (None for slab-less
+        workers) for a later :meth:`commit_patch`."""
+        if self.slab is None:
+            return None
+        shadow = dataclasses.replace(self.slab, adj=self.slab.adj.copy())
+        self._patch(eids, slab=shadow, w=w_next)
+        return shadow
+
+    def commit_patch(self, shadow, epoch: int) -> None:
+        """Pointer-swap handoff: the live slab becomes the previous-epoch
+        buffer (in-flight epoch-*e* queries keep reading it) and the
+        shadow, stamped at the new epoch, starts serving."""
+        if self.slab is not None and shadow is not None:
+            self.prev_slab = self.slab
+            self.slab = shadow
+        self._stamp(epoch)
+
+    def _patch(self, eids: np.ndarray, slab=None, w=None) -> None:
+        """Re-patch slab entries touched by updated edges.
+
+        Defaults patch the LIVE slab from the CURRENT graph weights (the
+        barrier/resync path); the streaming path passes a shadow slab
+        and the next epoch's weight buffer instead.
+        """
         g = self.dtlp.graph
+        slab = self.slab if slab is None else slab
+        w = g.w if w is None else w
         for e in np.asarray(eids, dtype=np.int64):
             gid = int(self.dtlp.edge_owner[e])
             row = self.row_of.get(gid)
@@ -318,14 +403,14 @@ class Worker:
             lu = sg.g2l[int(g.edge_u[e])]
             lv = sg.g2l[int(g.edge_v[e])]
             # min over parallel edges between (lu, lv), like the packer
-            self.slab.adj[row, lu, lv] = self._min_weight(sg, lu, lv)
+            slab.adj[row, lu, lv] = self._min_weight(sg, lu, lv, w)
             if not g.directed:
-                self.slab.adj[row, lv, lu] = self._min_weight(sg, lv, lu)
+                slab.adj[row, lv, lu] = self._min_weight(sg, lv, lu, w)
 
-    def _min_weight(self, sg, lu: int, lv: int) -> np.float32:
+    def _min_weight(self, sg, lu: int, lv: int, w: np.ndarray) -> np.float32:
         lo, hi = sg.indptr[lu], sg.indptr[lu + 1]
         hits = np.nonzero(sg.nbr[lo:hi] == lv)[0]
-        return np.float32(np.min(self.dtlp.graph.w[sg.eid[lo + hits]]))
+        return np.float32(np.min(w[sg.eid[lo + hits]]))
 
     def _observe_latency(self, dt: float, cost: float, n_tasks: int) -> None:
         """Fold one execute's solve latency into the straggler EWMA.
@@ -607,6 +692,54 @@ class Cluster:
                 worker.defer_weights(eids)
         return time.perf_counter() - t0
 
+    def apply_updates_streaming(self, eids, new_w, *,
+                                n_epochs: int = 1) -> tuple[float, float]:
+        """Streaming update commit: prepare epoch *e+1* (index deltas +
+        per-worker shadow slabs) while workers keep serving *e*, then
+        hand off with a pointer swap.  No drain — in-flight epoch-*e*
+        queries finish against the retained double buffers.
+
+        ``n_epochs`` > 1 records that this batch coalesced that many
+        queued :class:`UpdateBatch`es (last-write-wins merged upstream):
+        the epoch counter advances by the full count so per-batch epoch
+        accounting (``min_epoch`` holds, result stamps) matches what N
+        separate barrier commits would have produced.
+
+        Returns ``(prepare_s, commit_s)`` — commit is the swap window,
+        the only span during which admissions could observe a torn
+        state (they can't: it mutates only pointers + the epoch).
+        """
+        t0 = time.perf_counter()
+        plan = self.dtlp.prepare_updates(eids, new_w)
+        shadows: dict = {}
+        for w in self.workers:
+            if not w.alive:
+                continue
+            eids_w = plan.eids
+            if w.pending:
+                # revived worker that never re-synced: fold its missed
+                # batches into the shadow (w_next already carries their
+                # final weights), so the swap installs a CURRENT slab
+                eids_w = np.unique(np.concatenate(w.pending + [plan.eids]))
+            shadows[w.wid] = w.prepare_patch(eids_w, plan.w_next)
+        prepare_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.dtlp.commit_updates(plan)
+        if n_epochs > 1:
+            self.dtlp.graph.advance_epoch_to(
+                self.dtlp.epoch + int(n_epochs) - 1
+            )
+        epoch = self.epoch
+        for w in self.workers:
+            if w.alive:
+                if w.pending:
+                    w.stats.resyncs += 1
+                    w.pending = []
+                w.commit_patch(shadows.get(w.wid), epoch)
+            else:
+                w.defer_weights(plan.eids)
+        return prepare_s, time.perf_counter() - t1
+
     def rebaseline(self) -> float:
         """Re-anchor the DTLP bounds at the current weights.
 
@@ -633,11 +766,15 @@ class Cluster:
         ``Placement`` (primary/replica/load) so a restored cluster does
         not re-place from scratch, per-worker stats (including the
         straggler EWMA — a restored cluster remembers who was slow),
-        worker liveness/slow flags, and the graph epoch.
+        worker liveness/slow flags, and the graph epoch.  Format 3 adds
+        per-worker epochs and the deferred update batches dead workers
+        have not yet replayed — a restore that revives such a worker
+        must force the same resync the original would have, instead of
+        silently treating its slab as current.
         """
         g = self.dtlp.graph
         return {
-            "format": 2,
+            "format": 3,
             "n_workers": self.n_workers,
             "engine": self.engine,
             "epoch": self.epoch,
@@ -656,6 +793,11 @@ class Cluster:
                     "alive": w.alive,
                     "slow": w.slow,
                     "auto_benched": w.auto_benched,
+                    "epoch": w.epoch,
+                    "pending": [
+                        np.asarray(b, dtype=np.int64).copy()
+                        for b in w.pending
+                    ],
                 }
                 for w in self.workers
             ],
@@ -733,4 +875,17 @@ class Cluster:
                 wk.alive = bool(ws["alive"])
                 wk.slow = bool(ws["slow"])
                 wk.auto_benched = bool(ws.get("auto_benched", False))
+                if int(snap.get("format", 1)) >= 3:
+                    # a dead worker's deferred batches round-trip, and
+                    # its epoch rewinds to the recorded lag, so reviving
+                    # it forces the resync the original still owed —
+                    # contents are already current (the slab was packed
+                    # at the snapshot weights), but the epoch/resync
+                    # bookkeeping must match the pre-checkpoint cluster
+                    wk.pending = [
+                        np.asarray(b, dtype=np.int64).copy()
+                        for b in ws.get("pending", [])
+                    ]
+                    if not wk.alive:
+                        wk._stamp(int(ws.get("epoch", epoch)))
         return cl

@@ -46,10 +46,14 @@ window that groups simulated arrivals before a tick starts.
 scheduler — it adds typed requests, epoch stamping/barriers (via
 ``freeze_admission``) and deadline-based SLO admission (via
 ``predicted_wait``); ``submit``/``run`` here are internals.  Epoch
-safety carries over unchanged: update batches apply only while
-``active`` is empty, and an empty active set implies every pipe is
-drained (a batch always has ≥ 1 waiting query), so all in-flight dedup
-shares one epoch by construction.
+safety is per-ticket: every batch carries the ADMISSION epoch of its
+waiting queries (the cross-query join key is (epoch, k, task), both
+modes), and workers are told which epoch to solve at.  In barrier mode
+update batches still apply only while ``active`` is empty, so all
+in-flight dedup shares one epoch and behavior is byte-identical to the
+pre-epoch-fencing scheduler; in streaming mode a swap may commit with
+epoch-*e* queries in flight — they keep refining against the workers'
+double-buffered *e* state while *e+1* admissions batch separately.
 """
 
 from __future__ import annotations
@@ -307,6 +311,14 @@ class QueryScheduler:
                 worst = max(worst, pipe.depth * pipe.solve_ewma)
         return worst + queue_term
 
+    def min_active_epoch(self) -> int | None:
+        """Oldest admission epoch among in-flight queries, or None when
+        nothing is active — the streaming commit gate: a swap may only
+        commit once every active query is at the CURRENT epoch, keeping
+        the double buffer's depth-2 window {e, e+1} sufficient."""
+        epochs = [tk.epoch for tk in self.active if tk.epoch is not None]
+        return min(epochs) if epochs else None
+
     # ----------------------------------------------------------- admission
     def submit(self, s: int, t: int, k: int, *,
                arrival: float | None = None) -> QueryTicket:
@@ -391,7 +403,11 @@ class QueryScheduler:
         pair_gids, groups = refine_groups(self.cluster.dtlp, req.pairs,
                                           req.home)
         pending = _Pending(tk, req, pair_gids)
-        epoch = self.cluster.epoch
+        # the ADMISSION epoch, not the cluster's current one: under
+        # streaming updates a swap may commit while this query is in
+        # flight, and its later rounds must keep refining against the
+        # epoch its stepper snapshotted (workers double-buffer it)
+        epoch = tk.epoch
         for gid, items in groups.items():
             for _, a, b in items:
                 self.stats.tasks_requested += 1
@@ -439,7 +455,8 @@ class QueryScheduler:
                 self._requeue(batch)
                 continue
             t0 = time.perf_counter()
-            batch.future = worker.execute_async(list(batch.tasks), batch.k)
+            batch.future = worker.execute_async(list(batch.tasks), batch.k,
+                                                epoch=batch.epoch)
             busy = time.perf_counter() - t0
             self.stats.worker_busy_s[pipe.wid] = (
                 self.stats.worker_busy_s.get(pipe.wid, 0.0) + busy)
@@ -575,7 +592,13 @@ class QueryScheduler:
         # gather: group every active query's pairs, route to workers,
         # de-dup identical (gid, a, b) tasks across queries
         gathered = []  # (ticket, pair_gids)
-        merged: dict = {}  # (wid, k) → {(gid, a, b): None} ordered de-dup
+        # (wid, k, epoch) → {(gid, a, b): None} ordered de-dup: epoch is
+        # part of the batch identity so in-flight queries fenced at the
+        # previous epoch (streaming handoff) never share a solve — or a
+        # cache line — with queries admitted after the swap.  Barrier
+        # mode admits every active query at one epoch, so the extra key
+        # component changes nothing there.
+        merged: dict = {}
         for tk in self.active:
             req = tk._request
             pair_gids, groups = refine_groups(self.cluster.dtlp, req.pairs,
@@ -585,21 +608,23 @@ class QueryScheduler:
                 worker, reissued = self.cluster.route(gid)
                 if reissued:
                     self.cluster.reissues += len(items)
-                tasks = merged.setdefault((worker.wid, req.k), {})
+                tasks = merged.setdefault((worker.wid, req.k, tk.epoch), {})
                 for _, a, b in items:
                     self.stats.tasks_requested += 1
                     tasks.setdefault((gid, a, b), None)
-        # dispatch: one execute per worker (per distinct k) — all queries'
-        # misses share the same grouped slab solve and cache entries
-        results: dict = {}  # k → {(gid, a, b): [(dist, path)]}
-        for (wid, k), tasks in merged.items():
+        # dispatch: one execute per worker (per distinct k and epoch) —
+        # all queries' misses share the same grouped slab solve and
+        # cache entries
+        results: dict = {}  # (k, epoch) → {(gid, a, b): [(dist, path)]}
+        for (wid, k, epoch), tasks in merged.items():
             self.stats.tasks_dispatched += len(tasks)
             self.stats.batches_dispatched += 1
             self.stats.max_inflight_batches = max(
                 self.stats.max_inflight_batches, 1)
             tw0 = time.perf_counter()
-            results.setdefault(k, {}).update(
-                self.cluster.workers[wid].execute(list(tasks), k)
+            results.setdefault((k, epoch), {}).update(
+                self.cluster.workers[wid].execute(list(tasks), k,
+                                                  epoch=epoch)
             )
             self.stats.worker_busy_s[wid] = (
                 self.stats.worker_busy_s.get(wid, 0.0)
@@ -609,7 +634,8 @@ class QueryScheduler:
         for tk, pair_gids in gathered:
             req = tk._request
             seg_lists = merge_segments(req.pairs, pair_gids,
-                                       results.get(req.k, {}), req.k)
+                                       results.get((req.k, tk.epoch), {}),
+                                       req.k)
             req.stats.refine_tasks += len(req.pairs)
             tk.ticks += 1
             self._advance(tk, seg_lists)

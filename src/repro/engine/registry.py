@@ -14,12 +14,15 @@ module as the public way to plug in an engine; the builtin specs are
 ``pyen`` (host Yen), ``dense_bf`` (jnp grouped BF) and ``pallas_bf``
 (the fused Pallas kernel, interpret-mode on non-TPU hosts).
 
-A spec's ``refine(worker, misses, k)`` receives the worker (slab,
-row_of, dtlp access) and the cache-miss task list ``[(gid, a, b)]`` with
-global vertex ids, and returns ``{(gid, a, b): [(dist, global-path)]}``
-for exactly those tasks — epoch checks and cache fills stay in
-``Worker.execute``, so an engine can never serve stale weights by
-accident.
+A spec's ``refine(worker, misses, k, epoch)`` receives the worker (slab,
+row_of, dtlp access), the cache-miss task list ``[(gid, a, b)]`` with
+global vertex ids, and the serving epoch, and returns ``{(gid, a, b):
+[(dist, global-path)]}`` for exactly those tasks — epoch checks and
+cache fills stay in ``Worker.execute``, so an engine can never serve
+stale weights by accident.  The epoch matters under streaming updates:
+a worker double-buffers the previous epoch's slab/weights across one
+commit (``Worker.slab_for`` / ``Worker.weights_for``), so an engine must
+read THOSE accessors rather than ``worker.slab`` / ``dtlp.graph.w``.
 """
 
 from __future__ import annotations
@@ -42,8 +45,9 @@ __all__ = [
 class EngineSpec:
     """Everything the worker runtime needs to run one refine engine.
 
-    ``refine(worker, misses, k) -> {(gid, a, b): [(d, path)]}`` solves a
-    batch of partial-KSP tasks; ``packs_slab`` makes each worker pack its
+    ``refine(worker, misses, k, epoch) -> {(gid, a, b): [(d, path)]}``
+    solves a batch of partial-KSP tasks against the weights of
+    ``epoch``; ``packs_slab`` makes each worker pack its
     owned subgraphs into a dense ``[S, z, z]`` slab at init, with all
     geometry (lane alignment, bucket shapes) coming from ``backend
     .layout``; ``make_mesh_solver(mesh, mesh_axis) -> (solver,
@@ -121,16 +125,17 @@ def available_engines() -> list[str]:
 # ---------------------------------------------------------------------------
 # builtin engines
 # ---------------------------------------------------------------------------
-def _pyen_refine(worker, misses, k):
-    """Host Yen per pair on the live subgraph view (QueryBolt-side)."""
+def _pyen_refine(worker, misses, k, epoch):
+    """Host Yen per pair on the epoch's subgraph view (QueryBolt-side)."""
     from repro.core.sssp import subgraph_view
     from repro.core.yen import ksp
 
     dtlp = worker.dtlp
+    w = worker.weights_for(epoch)
     out = {}
     for gid, a, b in misses:
         sg = dtlp.partition.subgraphs[gid]
-        view = subgraph_view(sg, dtlp.graph.w)
+        view = subgraph_view(sg, w)
         local = ksp(
             view, sg.g2l[a], sg.g2l[b], k,
             mode="pyen", directed=dtlp.graph.directed,
@@ -141,22 +146,29 @@ def _pyen_refine(worker, misses, k):
     return out
 
 
-def _grouped_refine_async(worker, misses, k):
+def _grouped_refine_async(worker, misses, k, epoch):
     """Generator form of :func:`_grouped_refine`: all misses through ONE
     grouped [S, J, z] lockstep-Yen slab solve, yielding once per device
     round with the round dispatched but not yet forced (the pipelined
     scheduler interleaves other workers' host work into those gaps).
-    Returns the ``{(gid, a, b): [(d, path)]}`` dict."""
+    Returns the ``{(gid, a, b): [(d, path)]}`` dict.
+
+    The slab is looked up BY EPOCH, never as ``worker.slab``: the body
+    only runs at the first ``next()``, which under the pipelined
+    scheduler may land after a streaming swap commits — by then
+    ``worker.slab`` already holds the next epoch's weights and this
+    batch's epoch lives in ``worker.prev_slab``."""
     from repro.dist.grouped_yen import grouped_ksp_async
 
     dtlp = worker.dtlp
+    slab = worker.slab_for(epoch)
     gk_tasks = []
     for gid, a, b in misses:
         sg = dtlp.partition.subgraphs[gid]
         gk_tasks.append((worker.row_of[gid], sg.g2l[a], sg.g2l[b]))
     worker.stats.batches += 1
     results = yield from grouped_ksp_async(
-        worker.slab.adj, gk_tasks, k,
+        slab.adj, gk_tasks, k,
         solver=worker.solver, s_multiple=worker.s_multiple,
         backend=worker.spec.backend,
     )
@@ -170,11 +182,11 @@ def _grouped_refine_async(worker, misses, k):
     return out
 
 
-def _grouped_refine(worker, misses, k):
+def _grouped_refine(worker, misses, k, epoch):
     """Synchronous driver over :func:`_grouped_refine_async`, executed by
     the spec's :class:`SolverBackend` (jnp or Pallas) — or by the
     worker's mesh solver override when one is wired."""
-    gen = _grouped_refine_async(worker, misses, k)
+    gen = _grouped_refine_async(worker, misses, k, epoch)
     while True:
         try:
             next(gen)

@@ -93,6 +93,12 @@ def main():
         "multiple of the fleet median; 0 disables",
     )
     ap.add_argument(
+        "--update-mode", choices=("barrier", "streaming"), default="barrier",
+        help="how UpdateBatches land: barrier (freeze admission, drain "
+        "in-flight, apply — the reference) or streaming (prepare the next "
+        "epoch in shadow buffers, pointer-swap handoff, no drain)",
+    )
+    ap.add_argument(
         "--rebaseline-drift", type=float, default=0.05,
         help="re-anchor DTLP bounds when mean weight drift exceeds this "
         "(loose bounds blow up KSP-DG iteration counts); 0 disables. "
@@ -125,6 +131,7 @@ def main():
                           if args.straggler_factor > 0 else None),
         rebaseline_drift=args.rebaseline_drift,
         ref_stream=args.ref_stream,
+        update_mode=args.update_mode,
     )
     g = grid_road_network(args.rows, args.cols, seed=args.seed)
     print(f"road network: {g.n} vertices, {g.m} edges")
@@ -197,7 +204,7 @@ def main():
         dt = time.perf_counter() - t0
         print(
             f"  applied 1 update batch → epoch {svc.epoch} "
-            f"(barrier + index maintenance {dt * 1e3:.1f}ms)"
+            f"({args.update_mode} + index maintenance {dt * 1e3:.1f}ms)"
         )
         if svc.stats.rebaselines:
             drift = d.drift()

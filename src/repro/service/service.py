@@ -5,11 +5,17 @@ stamped results out, with a submit/poll/drain lifecycle wrapping the
 cross-query lockstep scheduler:
 
 * **Epoch-versioned serving.**  Every admitted query is stamped with the
-  graph epoch that will answer it; an :class:`UpdateBatch` is an *epoch
-  barrier* — the service freezes admission, drains the in-flight set
-  (those queries answer at the pre-update epoch), applies the batch
-  (bumping the epoch and patching every live worker's slab), then
-  resumes.  ``QueryRequest.min_epoch`` holds a query until the epoch
+  graph epoch that will answer it.  How an :class:`UpdateBatch` lands is
+  ``ServiceConfig.update_mode``: ``"barrier"`` (the reference) freezes
+  admission, drains the in-flight set (those queries answer at the
+  pre-update epoch), applies the batch (bumping the epoch and patching
+  every live worker's slab), then resumes; ``"streaming"`` never drains
+  — the next epoch's index deltas and worker slabs are prepared in
+  shadow buffers while serving continues, the handoff is a pointer swap
+  with per-query epoch fencing (in-flight queries keep refining against
+  their admission epoch's double-buffered state), and queued batches
+  coalesce last-write-wins per edge so prep never falls behind the
+  feed.  ``QueryRequest.min_epoch`` holds a query until the epoch
   reaches it, or rejects it outright when no queued update can get
   there.
 * **SLO admission.**  ``QueryRequest.deadline_ms`` rejects by *predicted*
@@ -31,7 +37,10 @@ from __future__ import annotations
 import itertools
 from collections import deque
 
+import numpy as np
+
 from repro.core.dtlp import DTLP
+from repro.core.graph import dedupe_updates
 from repro.dist.cluster import Cluster
 from repro.dist.scheduler import QueryScheduler, QueueFull, drive_trace
 
@@ -92,8 +101,17 @@ class KSPService:
         self.stats = ServiceStats()
         self._qid = itertools.count()
         self._updates: deque[UpdateBatch] = deque()
+        self._update_clocks: deque[float] = deque()  # enqueue instants
         self._held: list[ServiceTicket] = []  # waiting on min_epoch
         self._by_sqid: dict[int, ServiceTicket] = {}
+        # EWMA of seconds to apply/prepare one UpdateBatch: the
+        # update-prep term of predicted_wait (SLO admission must see
+        # queued batches, not just queued queries)
+        self._apply_ewma = 0.0
+        # per-batch update-visibility lag (seconds on the scheduler
+        # clock, enqueue → epoch commit) — the streaming benchmark's
+        # freshness metric; barrier mode records it too
+        self.update_lags: list[float] = []
 
     # ------------------------------------------------------- construction
     @classmethod
@@ -148,8 +166,22 @@ class KSPService:
         return self.cluster.reissues
 
     def predicted_wait_ms(self) -> float:
-        """The SLO admission signal: predicted queue delay, in ms."""
-        return self.scheduler.predicted_wait() * 1e3
+        """The SLO admission signal: predicted queue delay, in ms.
+
+        Folds queued/preparing update batches into the estimate: each
+        costs one apply (EWMA of observed apply times), and in barrier
+        mode a pending batch additionally freezes admission until every
+        in-flight query drains (≈ active count × tick latency EWMA).
+        Without this, ``deadline_ms`` admission systematically
+        underestimates the wait whenever a swap is pending.
+        """
+        wait = self.scheduler.predicted_wait()
+        if self._updates:
+            wait += len(self._updates) * self._apply_ewma
+            if self.config.update_mode == "barrier":
+                wait += (len(self.scheduler.active)
+                         * self.scheduler.tick_latency_ewma)
+        return wait * 1e3
 
     # ----------------------------------------------------------- admission
     def submit(self, request: QueryRequest, *,
@@ -205,18 +237,22 @@ class KSPService:
         self._by_sqid[tk.qid] = ticket
 
     def update(self, batch: UpdateBatch, *, wait: bool = True) -> int:
-        """Queue a weight-update batch behind the epoch barrier.
+        """Queue a weight-update batch for the configured update mode.
 
-        With ``wait=True`` (default) ticks until the batch has applied —
-        every in-flight query finishes at its admitted epoch first —
-        and returns the new epoch.  ``wait=False`` queues it for the
-        next safe point (a later ``tick``/``poll``/``drain`` applies it).
+        Barrier mode orders it behind every in-flight query (admission
+        freezes, the in-flight set drains, then the batch applies);
+        streaming mode commits it as an epoch handoff, draining
+        nothing.  With ``wait=True`` (default) ticks until the batch
+        has applied and returns the new epoch; ``wait=False`` queues it
+        for the next safe point (a later ``tick``/``poll``/``drain``
+        applies it — queued streaming batches coalesce).
         """
         if not isinstance(batch, UpdateBatch):
             raise TypeError(
                 f"update takes an UpdateBatch, got {type(batch).__name__}"
             )
         self._updates.append(batch)
+        self._update_clocks.append(self.scheduler.clock)
         if wait:
             while self._updates:
                 self.tick()
@@ -224,9 +260,13 @@ class KSPService:
 
     # ------------------------------------------------------------ lifecycle
     def tick(self) -> list[ServiceTicket]:
-        """One service round: barrier bookkeeping, held-query release,
-        one scheduler tick.  Returns the tickets completed on it."""
-        self._barrier()
+        """One service round: update bookkeeping (barrier drain or
+        streaming handoff, per ``config.update_mode``), held-query
+        release, one scheduler tick.  Returns the tickets completed."""
+        if self.config.update_mode == "streaming":
+            self._stream_updates()
+        else:
+            self._barrier()
         self._release_held()
         out = []
         for tk in self.scheduler.tick():
@@ -255,13 +295,62 @@ class KSPService:
             return
         while self._updates:
             batch = self._updates.popleft()
-            self.cluster.apply_updates(batch.eids, batch.new_w)
+            enq = self._update_clocks.popleft()
+            dt = self.cluster.apply_updates(batch.eids, batch.new_w)
+            self._observe_apply(dt)
+            self.update_lags.append(max(0.0, self.scheduler.clock - enq))
             self.stats.update_batches += 1
+        self._maybe_rebaseline()
+        self.scheduler.freeze_admission = False
+
+    def _stream_updates(self) -> None:
+        """Commit queued UpdateBatches as one streaming epoch handoff.
+
+        The gate: every in-flight query must already be at the CURRENT
+        epoch (the double buffer retains exactly one previous epoch, so
+        a second handoff cannot open while epoch-*e* queries still
+        run).  Queued batches coalesce — concatenated in arrival order,
+        de-duplicated last-write-wins per edge — into ONE prepare/swap
+        whose epoch advances by the batch count, so per-batch epoch
+        accounting (``min_epoch`` horizons, result stamps) matches N
+        barrier commits.  Admission is never frozen.
+        """
+        if not self._updates:
+            return
+        min_ep = self.scheduler.min_active_epoch()
+        if min_ep is not None and min_ep < self.epoch:
+            self.stats.handoff_waits += 1
+            return
+        batches = list(self._updates)
+        clocks = list(self._update_clocks)
+        self._updates.clear()
+        self._update_clocks.clear()
+        eids, new_w = dedupe_updates(
+            np.concatenate([b.eids for b in batches]),
+            np.concatenate([b.new_w for b in batches]),
+        )
+        prep_s, commit_s = self.cluster.apply_updates_streaming(
+            eids, new_w, n_epochs=len(batches)
+        )
+        self._observe_apply(prep_s + commit_s)
+        for enq in clocks:
+            self.update_lags.append(max(0.0, self.scheduler.clock - enq))
+        self.stats.update_batches += len(batches)
+        self.stats.coalesced_batches += len(batches) - 1
+        # drift rebaseline fires at the commit, no drain needed: weights
+        # are unchanged by it, in-flight steppers hold their admission
+        # snapshots, and only the control-plane index is rebuilt
+        self._maybe_rebaseline()
+
+    def _observe_apply(self, dt: float) -> None:
+        self._apply_ewma = (dt if self._apply_ewma == 0.0
+                            else 0.3 * dt + 0.7 * self._apply_ewma)
+
+    def _maybe_rebaseline(self) -> None:
         drift_gate = self.config.rebaseline_drift
         if drift_gate and self.dtlp.drift() > drift_gate:
             self.cluster.rebaseline()
             self.stats.rebaselines += 1
-        self.scheduler.freeze_admission = False
 
     def _release_held(self) -> None:
         if not self._held:

@@ -106,26 +106,37 @@ class QueryResult:
 class UpdateBatch:
     """One Δw batch: ``new_w[i]`` becomes the weight of edge ``eids[i]``.
 
-    Application is an epoch barrier: the service orders it after every
-    in-flight query (they answer at the pre-update epoch) and before
-    every query admitted afterwards (stamped with the new epoch).
+    Duplicate eids within a batch collapse last-write-wins at
+    construction — the batch means "these edges END UP at these
+    weights", and downstream incremental maintenance computes per-edge
+    deltas against pre-batch weights, which a repeated eid would
+    double-count.
+
+    Application is an epoch boundary either way the service runs it:
+    in ``update_mode="barrier"`` the service orders the batch after
+    every in-flight query (they answer at the pre-update epoch) and
+    before every query admitted afterwards (stamped with the new
+    epoch); in ``"streaming"`` mode the same ordering holds per query
+    via epoch fencing, without draining — in-flight queries finish
+    against the retained previous-epoch buffers.
     """
 
     eids: np.ndarray
     new_w: np.ndarray
 
     def __post_init__(self):
-        object.__setattr__(
-            self, "eids", np.asarray(self.eids, dtype=np.int64)
-        )
-        object.__setattr__(
-            self, "new_w", np.asarray(self.new_w, dtype=np.float64)
-        )
-        if self.eids.shape != self.new_w.shape:
+        eids = np.asarray(self.eids, dtype=np.int64)
+        new_w = np.asarray(self.new_w, dtype=np.float64)
+        if eids.shape != new_w.shape:
             raise ValueError(
-                f"eids {self.eids.shape} and new_w {self.new_w.shape} "
+                f"eids {eids.shape} and new_w {new_w.shape} "
                 "must have identical shapes"
             )
+        from repro.core.graph import dedupe_updates
+
+        eids, new_w = dedupe_updates(eids, new_w)
+        object.__setattr__(self, "eids", eids)
+        object.__setattr__(self, "new_w", new_w)
 
     def __len__(self) -> int:
         return int(self.eids.shape[0])
@@ -176,6 +187,14 @@ class ServiceConfig:
     # dispatched-but-unforced batches each worker pipe may hold (2 =
     # double-buffered: one solving on device, one filling on host)
     pipeline_depth: int = 2
+    # how UpdateBatches land: "barrier" (the reference) freezes
+    # admission and drains every in-flight query before applying;
+    # "streaming" prepares the next epoch (incremental index deltas +
+    # shadow slabs) while serving continues, commits with a pointer
+    # swap once every in-flight query is at the current epoch, and
+    # coalesces queued batches last-write-wins per edge so the prep
+    # pipeline never falls behind the feed
+    update_mode: str = "barrier"
 
     def __post_init__(self):
         from repro.core.refstream import get_ref_stream
@@ -190,6 +209,11 @@ class ServiceConfig:
             raise ValueError("max_in_flight must be ≥ 1")
         if self.pipeline_depth < 1:
             raise ValueError("pipeline_depth must be ≥ 1")
+        if self.update_mode not in ("barrier", "streaming"):
+            raise ValueError(
+                f"update_mode must be 'barrier' or 'streaming', "
+                f"got {self.update_mode!r}"
+            )
 
 
 @dataclasses.dataclass
@@ -205,6 +229,8 @@ class ServiceStats:
     update_batches: int = 0  # UpdateBatches applied (epoch bumps)
     barrier_ticks: int = 0  # ticks spent draining in-flight ahead of one
     rebaselines: int = 0  # drift-triggered DTLP rebaselines
+    coalesced_batches: int = 0  # queued batches merged into one commit
+    handoff_waits: int = 0  # streaming commits deferred: older epoch in flight
 
     @property
     def rejected(self) -> int:

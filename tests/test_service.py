@@ -443,7 +443,7 @@ class TestCheckpointRoundTrip:
         want = [cl.query(s, t, 3) for s, t in qs]
         cl.mark_slow(2)
         snap = cl.checkpoint()
-        assert snap["format"] == 2 and snap["epoch"] == 2
+        assert snap["format"] == 3 and snap["epoch"] == 2
 
         cl2 = Cluster.restore(
             snap, lambda: grid_road_network(10, 10, seed=7), z=16, xi=4

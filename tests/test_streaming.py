@@ -1,0 +1,312 @@
+"""Streaming updates end-to-end: epoch-matched answer equivalence with
+the barrier reference (both scheduler modes), the per-query epoch fence
+across a pointer-swap handoff, the worker double buffer, SLO folding of
+queued update batches, and format-3 checkpoints of deferred batches."""
+
+import numpy as np
+import pytest
+
+from repro.core.dtlp import DTLP
+from repro.core.sssp import graph_view
+from repro.core.yen import ksp
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+from repro.dist.cluster import Cluster, StaleReplicaError
+from repro.service import (
+    DeadlineExceeded,
+    KSPService,
+    QueryRequest,
+    ServiceConfig,
+    UpdateBatch,
+)
+
+
+def same_paths(a, b, rtol=1e-9):
+    """Identical path sequences; distances to within ``rtol`` (pyen is
+    float64 end to end, dense_bf accumulates on-device in float32)."""
+    return len(a) == len(b) and all(
+        pa == pb and abs(float(da) - float(db)) <= rtol * max(1.0, float(db))
+        for (da, pa), (db, pb) in zip(a, b)
+    )
+
+
+def run_mixed(update_mode, pipeline, n_queries=12, n_updates=3):
+    """One fixed interleaved trace: queries stream in, update batches
+    land mid-flight (``wait=False``), completions collected from EVERY
+    tick (not just the final drain)."""
+    g = grid_road_network(8, 8, seed=0)
+    cfg = ServiceConfig(
+        engine="dense_bf", n_workers=4, rebaseline_drift=0.0,
+        update_mode=update_mode, pipeline=pipeline,
+    )
+    svc = KSPService.build(g, cfg)
+    stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=7)
+    rng = np.random.default_rng(3)
+    qs = [tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+          for _ in range(n_queries)]
+    done = []
+    sent = 0
+    for i, (s, t) in enumerate(qs):
+        svc.submit(QueryRequest(s, t, 3))
+        if i % 4 == 3 and sent < n_updates:
+            svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+            sent += 1
+        done.extend(svc.tick())
+    done.extend(svc.drain())
+    return svc, {tk.qid: tk for tk in done if tk.result is not None}
+
+
+class TestStreamingEquivalence:
+    @pytest.mark.parametrize("pipeline", [True, False])
+    def test_matches_barrier_at_matching_epochs(self, pipeline):
+        """The tentpole's correctness bar: queries that observe the same
+        epoch return byte-identical answers in both modes, both end at
+        the same final epoch, and streaming never froze admission."""
+        svc_b, res_b = run_mixed("barrier", pipeline)
+        svc_s, res_s = run_mixed("streaming", pipeline)
+        assert svc_b.epoch == svc_s.epoch == 3
+        assert set(res_b) == set(res_s)  # same trace, same completions
+        matched = 0
+        for qid in res_b:
+            rb, rs = res_b[qid].result, res_s[qid].result
+            if rb.epoch == rs.epoch:
+                matched += 1
+                assert rb.paths == rs.paths, qid  # byte-level, no tol
+        assert matched >= 3  # the comparison must actually bite
+        # epoch-stamp integrity: a fresh query serves the final epoch,
+        # exact against the final weights
+        res = svc_s.query(0, 63, 3)
+        assert res.epoch == svc_s.epoch
+        assert same_paths(list(res.paths),
+                          ksp(graph_view(svc_s.dtlp.graph), 0, 63, 3),
+                          rtol=1e-5)
+        # mode telemetry: barrier froze admission, streaming never did
+        assert svc_b.stats.barrier_ticks >= 1
+        assert svc_s.stats.barrier_ticks == 0
+        assert svc_b.stats.update_batches == 3
+        assert svc_s.stats.update_batches == 3
+        # both modes record update-visibility lag for every batch
+        assert len(svc_b.update_lags) == len(svc_s.update_lags) == 3
+        assert all(lag >= 0.0 for lag in svc_s.update_lags)
+
+    def test_streaming_epoch_fence_on_in_flight_query(self):
+        """A query admitted at epoch 0 finishes at epoch 0 — bit-exact
+        against the pre-update weights — even though the handoff commits
+        mid-flight; the NEXT handoff waits for it (depth-2 window)."""
+        g = grid_road_network(8, 8, seed=1)
+        cfg = ServiceConfig(engine="pyen", n_workers=3, pipeline=False,
+                            update_mode="streaming", rebaseline_drift=0.0)
+        svc = KSPService.build(g, cfg)
+        stream = WeightUpdateStream(g, alpha=0.6, tau=0.5, seed=5)
+        s, t = 0, g.n - 1
+        want0 = ksp(graph_view(g), s, t, 3)  # epoch-0 truth, frozen now
+        ticket = svc.submit(QueryRequest(s, t, 3))
+        svc.tick()
+        assert svc.scheduler.active  # mid-flight at epoch 0
+        svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+        svc.tick()  # handoff commits under the in-flight query: no drain
+        assert svc.epoch == 1
+        assert svc.stats.barrier_ticks == 0
+        # a second batch now has to wait: the double buffer holds only
+        # one previous epoch and an epoch-0 query is still running
+        svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+        svc.tick()
+        if not ticket.done:
+            assert svc.epoch == 1 and svc.stats.handoff_waits >= 1
+        while not ticket.done:
+            svc.tick()
+        assert ticket.result.epoch == 0  # admission epoch, post-swap
+        assert same_paths(list(ticket.result.paths), want0)
+        svc.drain()
+        assert svc.epoch == 2  # the deferred batch landed once fenced
+        # fresh admissions serve the new epoch
+        res = svc.query(s, t, 3)
+        assert res.epoch == 2
+        assert same_paths(list(res.paths),
+                          ksp(graph_view(svc.dtlp.graph), s, t, 3))
+
+    def test_streaming_coalesces_queued_batches(self):
+        """N batches queued behind one fence collapse into ONE
+        prepare/swap whose epoch advances by N (per-batch accounting
+        preserved for min_epoch holds and result stamps)."""
+        g = grid_road_network(8, 8, seed=2)
+        cfg = ServiceConfig(engine="pyen", n_workers=2, pipeline=False,
+                            update_mode="streaming", rebaseline_drift=0.0)
+        svc = KSPService.build(g, cfg)
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=9)
+        # hold the fence shut with an in-flight epoch-0 query
+        ticket = svc.submit(QueryRequest(0, g.n - 1, 3))
+        svc.tick()
+        assert svc.scheduler.active
+        for _ in range(3):
+            svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+        svc.tick()  # epoch 0 in flight, nothing committed yet... wait:
+        # fence only blocks when min_active < current; at epoch 0 both
+        # are 0, so the FIRST tick commits all three coalesced
+        assert svc.epoch == 3
+        assert svc.stats.update_batches == 3
+        assert svc.stats.coalesced_batches == 2
+        svc.drain()
+        assert ticket.result.epoch == 0  # still fenced to admission
+        assert same_paths(list(svc.query(0, g.n - 1, 3).paths),
+                          ksp(graph_view(svc.dtlp.graph), 0, g.n - 1, 3))
+
+
+class TestWorkerDoubleBuffer:
+    def test_pointer_swap_and_epoch_window(self):
+        g = grid_road_network(8, 8, seed=2)
+        d = DTLP.build(g, z=16, xi=4)
+        cl = Cluster(d, n_workers=3, engine="dense_bf")
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=3)
+        w = next(wk for wk in cl.workers if wk.slab is not None)
+        old_slab = w.slab
+        assert old_slab.epoch == 0 and w.prev_slab is None
+        prep_s, commit_s = cl.apply_updates_streaming(*stream.next_batch())
+        assert prep_s >= 0.0 and commit_s >= 0.0
+        assert cl.epoch == 1
+        # pointer swap: the old slab object IS the previous buffer
+        assert w.slab is not old_slab and w.prev_slab is old_slab
+        assert w.slab.epoch == 1 and w.prev_slab.epoch == 0
+        assert w.slab_for(1) is w.slab and w.slab_for(0) is old_slab
+        assert w.ensure_epoch(1) == 1 and w.ensure_epoch(0) == 0
+        with pytest.raises(StaleReplicaError):
+            w.slab_for(5)
+        # host-side double buffer mirrors it
+        assert np.array_equal(w.weights_for(1), g.w)
+        assert w.weights_for(0) is not None
+        with pytest.raises(StaleReplicaError):
+            w.weights_for(7)
+        # the next handoff rolls the window: epoch 0 becomes unreachable
+        prev = w.slab
+        cl.apply_updates_streaming(*stream.next_batch())
+        assert w.slab.epoch == 2 and w.prev_slab is prev
+        for unreachable in (w.slab_for, w.weights_for, w.ensure_epoch):
+            with pytest.raises(StaleReplicaError):
+                unreachable(0)
+
+    def test_shadow_slab_bitwise_matches_barrier_patch(self):
+        """The shadow prepare/commit path must install byte-identical
+        slab contents to the in-place barrier patch of the same batch."""
+        batch = None
+        clusters = []
+        for _ in range(2):
+            g = grid_road_network(8, 8, seed=4)
+            if batch is None:
+                batch = WeightUpdateStream(
+                    g, alpha=0.5, tau=0.5, seed=9).next_batch()
+            clusters.append(
+                Cluster(DTLP.build(g, z=16, xi=4), n_workers=3,
+                        engine="dense_bf"))
+        stream_cl, barrier_cl = clusters
+        stream_cl.apply_updates_streaming(*(a.copy() for a in batch))
+        barrier_cl.apply_updates(*(a.copy() for a in batch))
+        assert stream_cl.epoch == barrier_cl.epoch == 1
+        for wa, wb in zip(stream_cl.workers, barrier_cl.workers):
+            assert wa.epoch == wb.epoch == 1
+            if wa.slab is not None:
+                assert np.array_equal(np.asarray(wa.slab.adj),
+                                      np.asarray(wb.slab.adj))
+
+    def test_dead_worker_defers_streaming_batches_too(self):
+        g = grid_road_network(8, 8, seed=5)
+        d = DTLP.build(g, z=16, xi=4)
+        cl = Cluster(d, n_workers=3, engine="dense_bf")
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=3)
+        cl.kill(1)
+        dead = cl.workers[1]
+        cl.apply_updates_streaming(*stream.next_batch())
+        assert dead.epoch == 0 and len(dead.pending) == 1
+        with pytest.raises(StaleReplicaError):
+            dead.ensure_epoch()
+        cl.revive(1)
+        dead.ensure_epoch()  # lazy resync replays the missed batch
+        assert dead.epoch == 1 and not dead.pending
+        assert dead.stats.resyncs == 1
+
+
+class TestPredictedWaitFoldsUpdates:
+    @pytest.mark.parametrize("mode", ["barrier", "streaming"])
+    def test_queued_batches_charge_their_apply_cost(self, mode):
+        g = grid_road_network(8, 8, seed=3)
+        cfg = ServiceConfig(engine="pyen", n_workers=2, pipeline=False,
+                            update_mode=mode, rebaseline_drift=0.0)
+        svc = KSPService.build(g, cfg)
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=11)
+        svc.update(UpdateBatch(*stream.next_batch()))  # warm the EWMA
+        assert svc._apply_ewma > 0.0
+        base = svc.predicted_wait_ms()
+        svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+        one = svc.predicted_wait_ms()
+        svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+        two = svc.predicted_wait_ms()
+        assert base < one < two  # each queued batch adds one apply
+        assert one - base == pytest.approx(svc._apply_ewma * 1e3, rel=1e-6)
+        # and it feeds SLO admission: a deadline the queue-only estimate
+        # would accept now rejects
+        svc._apply_ewma = 0.05  # 50ms/batch, 2 batches queued
+        with pytest.raises(DeadlineExceeded):
+            svc.submit(QueryRequest(0, g.n - 1, 2, deadline_ms=25.0))
+        assert svc.stats.rejected_deadline == 1
+        svc.drain()
+        assert svc.predicted_wait_ms() == pytest.approx(base, abs=1e-6)
+
+    def test_barrier_additionally_charges_the_drain(self):
+        # seed-1 grid, corner-to-corner k=3: needs >1 refinement round,
+        # so it is deterministically still in flight after one tick
+        g = grid_road_network(8, 8, seed=1)
+        cfg = ServiceConfig(engine="pyen", n_workers=2, pipeline=False,
+                            update_mode="barrier", rebaseline_drift=0.0)
+        svc = KSPService.build(g, cfg)
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=11)
+        svc.submit(QueryRequest(0, g.n - 1, 3))
+        svc.tick()
+        assert svc.scheduler.active
+        svc.scheduler.tick_latency_ewma = 0.010
+        base = svc.predicted_wait_ms()
+        svc.update(UpdateBatch(*stream.next_batch()), wait=False)
+        # barrier: apply cost PLUS draining the in-flight set (≥ 10ms)
+        assert (svc.predicted_wait_ms()
+                >= base + len(svc.scheduler.active) * 10.0 - 1e-6)
+        svc.drain()
+
+
+class TestDeferredBatchCheckpoint:
+    def test_format3_roundtrips_pending_and_lagging_epoch(self):
+        """Regression (restore-after-deferred-updates): pre-format-3
+        checkpoints dropped dead workers' deferred batches and epoch
+        lag, so a restored-then-revived worker skipped its resync."""
+        def factory():
+            return grid_road_network(10, 10, seed=6)
+
+        g = factory()
+        d = DTLP.build(g, z=16, xi=4)
+        cl = Cluster(d, n_workers=3, engine="dense_bf")
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=13)
+        cl.kill(1)
+        cl.apply_updates(*stream.next_batch())            # barrier defer
+        cl.apply_updates_streaming(*stream.next_batch())  # streaming defer
+        dead = cl.workers[1]
+        assert len(dead.pending) == 2 and dead.epoch == 0
+        snap = cl.checkpoint()
+        assert snap["format"] == 3
+        ws = snap["workers"][1]
+        assert int(ws["epoch"]) == 0 and len(ws["pending"]) == 2
+
+        cl2 = Cluster.restore(snap, factory, z=16, xi=4)
+        d2 = cl2.workers[1]
+        assert not d2.alive and d2.epoch == 0 and cl2.epoch == 2
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(dead.pending, d2.pending))
+        # a post-restore batch keeps deferring onto the restored list
+        cl2.apply_updates(*stream.next_batch())
+        assert len(d2.pending) == 3 and d2.epoch == 0
+        cl2.revive(1)
+        d2.ensure_epoch()  # first touch replays all three batches
+        assert d2.stats.resyncs == 1 and not d2.pending
+        assert d2.epoch == cl2.epoch == 3
+        # and the fleet answers exactly against the final weights
+        view = graph_view(cl2.dtlp.graph)
+        rng = np.random.default_rng(15)
+        for _ in range(4):
+            s, t = map(int, rng.choice(g.n, size=2, replace=False))
+            got = cl2.query(s, t, 3)
+            assert same_paths(got, ksp(view, s, t, 3), rtol=1e-5), (s, t)
