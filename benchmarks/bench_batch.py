@@ -47,7 +47,7 @@ import numpy as np
 from repro.core.dtlp import DTLP
 from repro.service import KSPService, QueryRequest, ServiceConfig
 
-from .common import build_network, emit, rand_queries
+from .common import build_network, emit, rand_queries, service_row
 
 CONCURRENCIES = [1, 2, 4, 8]
 
@@ -165,6 +165,7 @@ def bench_batch(quick=True, engine=None, smoke=False, mixed=False):
                     dedup_frac=round(
                         st.tasks_deduped / max(1, st.tasks_requested), 4
                     ),
+                    **service_row(svc),
                 )
             )
         # ---- SLO admission under overload (deadline reject rate) ----
@@ -192,6 +193,7 @@ def bench_batch(quick=True, engine=None, smoke=False, mixed=False):
                 rejected_deadline=svc.stats.rejected_deadline,
                 rejected_queue=svc.stats.rejected_queue,
                 reject_rate=round(rejected / len(slo_qs), 4),
+                **service_row(svc),
             )
         )
     # ---- mixed-size leg: power-law k / path lengths (fig=batch_mixed) ----
@@ -230,6 +232,7 @@ def bench_batch(quick=True, engine=None, smoke=False, mixed=False):
                         dedup_frac=round(
                             st.tasks_deduped / max(1, st.tasks_requested), 4
                         ),
+                        **service_row(svc),
                     )
                 )
     emit("batch", rows)

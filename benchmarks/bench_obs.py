@@ -1,0 +1,204 @@
+"""Observability overhead: what tracing costs, disabled and enabled.
+
+``repro.obs`` promises a near-zero disabled path — one branch on a
+module flag per instrumentation site — and a cheap enabled path (append
+one NamedTuple per record).  This benchmark prices both against the
+quick ``bench_batch`` serving profile and **fails CI** when either
+regresses:
+
+* **disabled ≤ 2%**: the per-call cost of a disabled ``obs.span_at``
+  (micro-benchmarked over 200k calls) × the number of records an
+  enabled run of the same trace actually emits must stay under 2% of
+  the disabled run's wall time.  The projection is the honest form of
+  the gate: the end-to-end disabled-vs-nothing delta is far below
+  run-to-run noise on a shared CI runner, which is exactly the claim —
+  so the gate prices the instrumentation directly and scales it by the
+  real record count.
+* **enabled ≤ 10%**: best-of-N p50 query latency with full tracing on
+  must stay within 1.10x of the disabled p50 (+1ms epsilon for
+  sub-ms profiles), passes interleaved disabled/enabled so machine
+  phases bias both arms equally.
+
+The final enabled pass's trace is exported to
+``results/trace_smoke.json`` (schema-validated here: loads as JSON,
+ph/pid/tid/ts on every event, ``dur`` on complete spans, ``ts``
+monotone per tid, every serving pump stage present) and uploaded as a
+CI artifact next to the other results/*.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro import obs
+from repro.core.dtlp import DTLP
+from repro.service import KSPService, QueryRequest, ServiceConfig
+
+from .common import RESULTS_DIR, build_network, emit, rand_queries
+
+# the stages one serving trace must show (the tentpole's acceptance
+# criterion: admission → dispatch → solve → splice per-worker timelines)
+REQUIRED_STAGES = {"admit", "queue_wait", "dispatch", "solve", "splice",
+                   "execute"}
+MICRO_CALLS = 200_000
+
+
+def _serve_pass(dtlp, qs, k, *, engine, workers, concurrency):
+    """One replay on a fresh service; returns (svc, p50_ms, total_s)."""
+    svc = KSPService(dtlp, ServiceConfig(
+        engine=engine, n_workers=workers, max_in_flight=concurrency,
+        straggler_factor=None,
+    ))
+    reqs = [QueryRequest(s, t, k) for s, t in qs]
+    t0 = time.perf_counter()
+    tickets = svc.replay(reqs)
+    total = time.perf_counter() - t0
+    lat = sorted(tk.result.latency_ms for tk in tickets)
+    return svc, lat[len(lat) // 2], total
+
+
+def _micro_disabled_cost() -> float:
+    """Seconds per disabled ``span_at`` call (the single-branch path)."""
+    assert not obs.enabled()
+    t0 = time.perf_counter()
+    for _ in range(MICRO_CALLS):
+        obs.span_at("x", 0.0, 0.0, worker=0)
+    return (time.perf_counter() - t0) / MICRO_CALLS
+
+
+def _validate_trace(path) -> dict:
+    """Chrome-trace schema check; returns summary counts or raises."""
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    per_tid_last: dict = {}
+    names: set = set()
+    n_spans = 0
+    for e in events:
+        for field in ("ph", "pid", "tid", "name"):
+            if field not in e:
+                raise SystemExit(
+                    f"trace schema: event missing {field!r}: {e}"
+                )
+        if e["ph"] == "M":
+            continue
+        if "ts" not in e:
+            raise SystemExit(f"trace schema: event missing 'ts': {e}")
+        if e["ph"] == "X":
+            if "dur" not in e:
+                raise SystemExit(
+                    f"trace schema: complete span missing 'dur': {e}"
+                )
+            n_spans += 1
+        if e["ts"] < per_tid_last.get(e["tid"], -1.0):
+            raise SystemExit(
+                f"trace schema: ts not monotone on tid {e['tid']}"
+            )
+        per_tid_last[e["tid"]] = e["ts"]
+        names.add(e["name"])
+    missing = REQUIRED_STAGES - names
+    if missing:
+        raise SystemExit(
+            f"trace is missing serving stages: {sorted(missing)} "
+            f"(got {sorted(names)})"
+        )
+    return {"events": len(events), "spans": n_spans,
+            "tracks": len(per_tid_last)}
+
+
+def bench_obs(smoke=False, engine="dense_bf"):
+    g, z = build_network("NY-s", quick=True)
+    n_q, workers, k, conc = 6, 2, 3, 8
+    repeat = 3
+    d = DTLP.build(g, z=z, xi=4)
+    qs = rand_queries(g, n_q, seed=3)
+
+    obs.disable()
+    # warm the jit shape buckets outside the measurement (both arms)
+    _serve_pass(d, qs, k, engine=engine, workers=workers, concurrency=conc)
+
+    best = {"off": None, "on": None}  # arm → (p50_ms, total_s)
+    records = 0
+    trace_path = os.path.join(RESULTS_DIR, "trace_smoke.json")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    # interleave arms so GC / runner-load phases bias both equally
+    for _ in range(repeat):
+        for arm in ("off", "on"):
+            if arm == "on":
+                col = obs.enable(trace=True)
+            _, p50, total = _serve_pass(d, qs, k, engine=engine,
+                                        workers=workers, concurrency=conc)
+            if arm == "on":
+                # every pass overwrites: the artifact is the LAST enabled
+                # trace, records the count the disabled gate scales by
+                records = len(col.events)
+                obs.export(trace_path)
+                obs.disable()
+            if best[arm] is None or total < best[arm][1]:
+                best[arm] = (p50, total)
+
+    per_call_s = _micro_disabled_cost()
+    p50_off, total_off = best["off"]
+    p50_on, total_on = best["on"]
+    # projected end-to-end cost of the DISABLED instrumentation: the
+    # per-call branch cost at every site that would have recorded
+    disabled_frac = per_call_s * records / total_off
+    enabled_ratio = p50_on / p50_off if p50_off > 0 else 1.0
+
+    summary = _validate_trace(trace_path)
+    rows = [dict(
+        fig="obs", engine=engine, n_queries=n_q, workers=workers,
+        concurrency=conc,
+        p50_off_ms=round(p50_off, 2), p50_on_ms=round(p50_on, 2),
+        total_off_s=round(total_off, 3), total_on_s=round(total_on, 3),
+        records=records,
+        disabled_ns_per_call=round(per_call_s * 1e9, 1),
+        disabled_overhead_frac=round(disabled_frac, 6),
+        enabled_p50_ratio=round(enabled_ratio, 4),
+        trace_events=summary["events"],
+        trace_tracks=summary["tracks"],
+    )]
+    emit("obs", rows)
+    print(f"trace artifact: {summary['spans']} spans on "
+          f"{summary['tracks']} tracks → {trace_path}")
+
+    if disabled_frac > 0.02:
+        raise SystemExit(
+            f"obs gate FAILED: disabled instrumentation projects to "
+            f"{disabled_frac * 100:.2f}% of the run "
+            f"({per_call_s * 1e9:.0f}ns/call × {records} records vs "
+            f"{total_off:.3f}s) — the disabled path must stay ≤ 2%"
+        )
+    print(f"obs gate OK: disabled path {per_call_s * 1e9:.0f}ns/call × "
+          f"{records} records = {disabled_frac * 100:.3f}% of "
+          f"{total_off * 1e3:.0f}ms (≤ 2%)")
+    # +1ms epsilon: on a sub-ms p50 profile the ratio alone would gate
+    # on scheduler jitter, not on tracing cost
+    if p50_on > 1.10 * p50_off + 1.0:
+        raise SystemExit(
+            f"obs gate FAILED: enabled-tracing p50 {p50_on:.2f}ms "
+            f"exceeds 1.10x disabled p50 {p50_off:.2f}ms (+1ms) — "
+            f"recording must stay under 10% of query latency"
+        )
+    print(f"obs gate OK: enabled p50 {p50_on:.2f}ms vs disabled "
+          f"{p50_off:.2f}ms (ratio {enabled_ratio:.3f}, ≤ 1.10 + 1ms)")
+    return rows
+
+
+def main(quick=True, smoke=False, engine="dense_bf"):
+    bench_obs(smoke=smoke, engine=engine)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="dense_bf")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: fail when disabled instrumentation "
+                    "projects past 2%% of the run or enabled tracing "
+                    "costs more than 10%% of p50 latency")
+    a = ap.parse_args()
+    main(smoke=a.smoke, engine=a.engine)

@@ -39,7 +39,7 @@ from repro.service import (
     UpdateBatch,
 )
 
-from .common import build_network, emit, rand_queries
+from .common import build_network, emit, rand_queries, service_row
 
 K_MIXED = (2, 3, 5)
 
@@ -95,6 +95,7 @@ def run_leg(net, mode, updates_per_query, n_queries, *, engine="dense_bf",
         lag_mean_ms=(round(float(lags.mean()), 2) if lags.size else 0.0),
         lag_p95_ms=(round(float(np.percentile(lags, 95)), 2)
                     if lags.size else 0.0),
+        **service_row(svc),
     )
     results = {tk.qid: (tk.result.epoch, tuple(tk.result.paths))
                for tk in done if tk.result is not None}

@@ -54,6 +54,29 @@ def rand_queries(g, n, seed=0):
     ]
 
 
+def service_row(svc) -> dict:
+    """Flatten ``KSPService.snapshot()`` into the fixed ``svc_*`` column
+    set every serving bench row carries — one schema regardless of which
+    bench produced the row, so results files join on the same fields.
+    """
+    snap = svc.snapshot()
+    service, sched = snap["service"], snap["scheduler"]
+    return {
+        "svc_completed": service["completed"],
+        "svc_rejected": service["rejected"],
+        "svc_update_batches": service["update_batches"],
+        "svc_handoff_waits": service["handoff_waits"],
+        "svc_coalesced": service["coalesced_batches"],
+        "svc_resyncs": snap["cluster"]["resyncs"],
+        "svc_reissues": snap["cluster"]["reissues"],
+        "svc_ticks": sched["ticks"],
+        "svc_dedup_frac": (
+            round(sched["tasks_deduped"] / sched["tasks_requested"], 4)
+            if sched["tasks_requested"] else 0.0
+        ),
+    }
+
+
 def emit(name: str, rows: list[dict]):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"bench_{name}.json")

@@ -22,6 +22,7 @@ def main() -> None:
         bench_batch,
         bench_dtlp,
         bench_engine,
+        bench_obs,
         bench_query,
         bench_scaleout,
         bench_update,
@@ -36,6 +37,7 @@ def main() -> None:
         "batch": bench_batch.main,          # cross-query batched serving
         "update": bench_update.main,        # live-update feed: barrier vs
                                             # streaming epoch handoff
+        "obs": bench_obs.main,              # tracing/metrics overhead gate
     }
     t0 = time.time()
     for name, fn in suites.items():

@@ -22,6 +22,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro import obs
+
 from .dtlp import DTLP
 from .refstream import TIE_EPS, get_ref_stream
 from .sssp import CSRView, dijkstra, subgraph_view
@@ -392,6 +394,9 @@ def ksp_dg_stepper(
             ref_pairs.append(idxs)
         if pairs:
             stats.iterations += 1
+            obs.event("ksp_iteration", s=s, t=t,
+                      iteration=stats.iterations, pairs=len(pairs),
+                      references=stats.references)
             seg_lists = yield RefineRequest(pairs=pairs, home=home, k=k,
                                             stats=stats)
             if isinstance(seg_lists, dict):

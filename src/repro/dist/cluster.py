@@ -29,10 +29,10 @@ round-trips placement, per-worker stats and the epoch.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.dtlp import DTLP
 from repro.core.kspdg import PartialKSPCache, ksp_dg, refine_groups
 from repro.engine.registry import EngineSpec, get_engine
@@ -142,14 +142,18 @@ class SolveFuture:
         Safe to call on a finished future (no-op)."""
         if self._done:
             return True
-        t0 = time.perf_counter()
-        try:
-            next(self._gen)
-        except StopIteration as fin:
-            self._host_s += time.perf_counter() - t0
-            self._finish(fin.value)
-            return True
-        self._host_s += time.perf_counter() - t0
+        t0 = obs.clock()
+        # ambient-track scope: spans the engine backend emits during
+        # this round (solve_grouped dispatch) land on this worker's
+        # timeline without threading wid through the engine API
+        with obs.worker_scope(self.worker.wid):
+            try:
+                next(self._gen)
+            except StopIteration as fin:
+                self._host_s += obs.clock() - t0
+                self._finish(fin.value)
+                return True
+        self._host_s += obs.clock() - t0
         return False
 
     def result(self) -> dict:
@@ -237,6 +241,15 @@ class Worker:
         weights even after the *e+1* swap commits); ``None`` means the
         current graph epoch, the barrier-mode behavior.
         """
+        t0 = obs.clock()
+        fut = self._execute_async(tasks, k, epoch)
+        obs.span_at("execute", t0, obs.clock() - t0, worker=self.wid,
+                    epoch=fut.epoch, k=k, tasks=len(tasks),
+                    misses=fut.n_tasks)
+        return fut
+
+    def _execute_async(self, tasks, k: int,
+                       epoch: int | None = None) -> SolveFuture:
         epoch = self.ensure_epoch(epoch)
         out: dict = {}
         misses = []
@@ -256,9 +269,10 @@ class Worker:
             # straggler signal times the real solve only (cache-hit
             # round-trips are ~free and would wash the EWMA with noise)
             fut = SolveFuture(self, epoch, k, out, misses, None)
-            t0 = time.perf_counter()
-            solved = self.spec.refine(self, misses, k, epoch)
-            fut._host_s = time.perf_counter() - t0
+            t0 = obs.clock()
+            with obs.worker_scope(self.wid):
+                solved = self.spec.refine(self, misses, k, epoch)
+            fut._host_s = obs.clock() - t0
             fut._finish(solved)
             return fut
         gen = self.spec.refine_async(self, misses, k, epoch)
@@ -343,10 +357,13 @@ class Worker:
     def resync(self) -> None:
         """Replay missed update batches into the slab, advance the epoch."""
         self.stats.resyncs += 1
+        t0 = obs.clock()
         pending, self.pending = self.pending, []
         if self.slab is not None and pending:
             self._patch(np.concatenate(pending))
         self._stamp(self.dtlp.epoch)
+        obs.span_at("resync", t0, obs.clock() - t0, worker=self.wid,
+                    epoch=self.epoch, batches=len(pending))
 
     def patch_weights(self, eids: np.ndarray) -> None:
         """Apply one update batch in lockstep (the live-worker path)."""
@@ -682,7 +699,7 @@ class Cluster:
         worker in lockstep, and defer the batch on dead workers so their
         replicas re-sync on revival instead of serving stale weights.
         Returns seconds."""
-        t0 = time.perf_counter()
+        t0 = obs.clock()
         eids = np.asarray(eids, dtype=np.int64)
         self.dtlp.apply_updates(eids, np.asarray(new_w, dtype=np.float64))
         for worker in self.workers:
@@ -690,7 +707,10 @@ class Cluster:
                 worker.patch_weights(eids)
             else:
                 worker.defer_weights(eids)
-        return time.perf_counter() - t0
+        dt = obs.clock() - t0
+        obs.span_at("apply_updates", t0, dt, epoch=self.epoch,
+                    edges=int(eids.shape[0]))
+        return dt
 
     def apply_updates_streaming(self, eids, new_w, *,
                                 n_epochs: int = 1) -> tuple[float, float]:
@@ -709,7 +729,7 @@ class Cluster:
         the only span during which admissions could observe a torn
         state (they can't: it mutates only pointers + the epoch).
         """
-        t0 = time.perf_counter()
+        t0 = obs.clock()
         plan = self.dtlp.prepare_updates(eids, new_w)
         shadows: dict = {}
         for w in self.workers:
@@ -721,9 +741,14 @@ class Cluster:
                 # batches into the shadow (w_next already carries their
                 # final weights), so the swap installs a CURRENT slab
                 eids_w = np.unique(np.concatenate(w.pending + [plan.eids]))
+            tw = obs.clock()
             shadows[w.wid] = w.prepare_patch(eids_w, plan.w_next)
-        prepare_s = time.perf_counter() - t0
-        t1 = time.perf_counter()
+            obs.span_at("prepare_patch", tw, obs.clock() - tw,
+                        worker=w.wid, edges=int(eids_w.shape[0]))
+        prepare_s = obs.clock() - t0
+        obs.span_at("epoch_prepare", t0, prepare_s,
+                    epoch=self.epoch + 1, edges=int(plan.eids.shape[0]))
+        t1 = obs.clock()
         self.dtlp.commit_updates(plan)
         if n_epochs > 1:
             self.dtlp.graph.advance_epoch_to(
@@ -735,10 +760,16 @@ class Cluster:
                 if w.pending:
                     w.stats.resyncs += 1
                     w.pending = []
+                tw = obs.clock()
                 w.commit_patch(shadows.get(w.wid), epoch)
+                obs.span_at("commit_patch", tw, obs.clock() - tw,
+                            worker=w.wid, epoch=epoch)
             else:
                 w.defer_weights(plan.eids)
-        return prepare_s, time.perf_counter() - t1
+        commit_s = obs.clock() - t1
+        obs.span_at("epoch_commit", t1, commit_s, epoch=epoch,
+                    n_epochs=int(n_epochs))
+        return prepare_s, commit_s
 
     def rebaseline(self) -> float:
         """Re-anchor the DTLP bounds at the current weights.
@@ -749,7 +780,10 @@ class Cluster:
         don't change, so worker slabs and epoch-keyed caches stay
         valid; only the control-plane index is rebuilt.  Returns seconds.
         """
-        return self.dtlp.rebaseline()
+        t0 = obs.clock()
+        dt = self.dtlp.rebaseline()
+        obs.span_at("rebaseline", t0, dt, epoch=self.epoch)
+        return dt
 
     def rescale(self, n_workers: int) -> None:
         """Elastic rescale: re-place subgraphs onto a new worker set.

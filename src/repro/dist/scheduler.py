@@ -60,9 +60,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
 from collections import deque
 
+from repro import obs
 from repro.core.kspdg import ksp_dg_stepper, refine_groups
 
 from .cluster import Cluster, merge_segments
@@ -130,6 +130,9 @@ class QueryTicket:
     stats: object = None  # core QueryStats, set on completion
     _stepper: object = dataclasses.field(default=None, repr=False)
     _request: object = dataclasses.field(default=None, repr=False)
+    # wall clock (obs.clock) at submit — the queue_wait span's origin;
+    # distinct from `arrival`, which lives on the SIMULATED clock
+    _t_wall: float = dataclasses.field(default=0.0, repr=False)
 
     @property
     def done(self) -> bool:
@@ -166,7 +169,7 @@ class _Batch:
         self.tasks: dict = {}  # ordered {(gid, a, b): None}
         self.waiters: dict = {}  # ordered {_Pending: [its tasks here]}
         self.future = None  # SolveFuture once dispatched
-        self.t_dispatch = None  # perf_counter at dispatch (solve EWMA)
+        self.t_dispatch = None  # obs.clock at dispatch (solve EWMA)
 
 
 class _Pending:
@@ -343,6 +346,7 @@ class QueryScheduler:
         ticket = QueryTicket(
             qid=next(self._qid), s=int(s), t=int(t), k=int(k),
             arrival=self.clock if arrival is None else float(arrival),
+            _t_wall=obs.clock(),
         )
         self.queue.append(ticket)
         self.stats.max_queue_depth = max(self.stats.max_queue_depth,
@@ -357,6 +361,9 @@ class QueryScheduler:
             tk = self.queue.popleft()
             tk.admitted_at = self.clock
             tk.epoch = self.cluster.epoch  # the epoch that will answer it
+            t_adm = obs.clock()
+            obs.span_at("queue_wait", tk._t_wall, t_adm - tk._t_wall,
+                        qid=tk.qid)
             tk._stepper = ksp_dg_stepper(
                 self.cluster.dtlp, tk.s, tk.t, tk.k,
                 max_iterations=self.max_iterations,
@@ -364,6 +371,8 @@ class QueryScheduler:
             )
             self.stats.admitted += 1
             self._advance(tk, None)  # prime to the first RefineRequest
+            obs.span_at("admit", t_adm, obs.clock() - t_adm, qid=tk.qid,
+                        s=tk.s, t=tk.t, k=tk.k, epoch=tk.epoch)
             if not tk.done:
                 self.active.append(tk)
                 if self.pipeline:
@@ -392,7 +401,7 @@ class QueryScheduler:
         clock-add per tick, valid only inside a pipelined tick."""
         if self._mark is None:
             return
-        now = time.perf_counter()
+        now = obs.clock()
         self.clock += now - self._mark
         self._mark = now
 
@@ -454,12 +463,15 @@ class QueryScheduler:
                 # (and its waiters) through the replica placement
                 self._requeue(batch)
                 continue
-            t0 = time.perf_counter()
+            t0 = obs.clock()
             batch.future = worker.execute_async(list(batch.tasks), batch.k,
                                                 epoch=batch.epoch)
-            busy = time.perf_counter() - t0
+            busy = obs.clock() - t0
             self.stats.worker_busy_s[pipe.wid] = (
                 self.stats.worker_busy_s.get(pipe.wid, 0.0) + busy)
+            obs.span_at("dispatch", t0, busy, worker=pipe.wid,
+                        epoch=batch.epoch, k=batch.k,
+                        tasks=len(batch.tasks))
             batch.t_dispatch = t0
             self.stats.batches_dispatched += 1
             self.stats.tasks_dispatched += len(batch.tasks)
@@ -480,7 +492,7 @@ class QueryScheduler:
         any query whose round is now complete splices and advances."""
         results = batch.future.result()
         if batch.t_dispatch is not None:
-            service = time.perf_counter() - batch.t_dispatch
+            service = obs.clock() - batch.t_dispatch
             pipe.solve_ewma = (service if pipe.solve_samples == 0
                                else 0.3 * service + 0.7 * pipe.solve_ewma)
             pipe.solve_samples += 1
@@ -502,12 +514,16 @@ class QueryScheduler:
         admission queue) or gather its next round into the pipes."""
         tk = pending.tk
         req = pending.req
+        t0 = obs.clock()
         seg_lists = merge_segments(req.pairs, pending.pair_gids,
                                    pending.results, req.k)
         req.stats.refine_tasks += len(req.pairs)
         tk.ticks += 1
         self._stamp_clock()
         self._advance(tk, seg_lists)
+        obs.span_at("splice", t0, obs.clock() - t0, qid=tk.qid,
+                    pairs=len(req.pairs), iteration=tk.ticks,
+                    done=tk.done)
         if tk.done:
             self.active.remove(tk)
             self._admit()  # a slot freed mid-pump: pull the next query in
@@ -519,7 +535,7 @@ class QueryScheduler:
         in-flight batch one device round, deliver completions.  Returns
         after ≥ 1 batch delivery (so the replay loop can interleave
         arrivals) or when nothing is in flight."""
-        t_begin = time.perf_counter()
+        t_begin = obs.clock()
         self._mark = t_begin
         n_fin = len(self.finished)
         self._admit()
@@ -544,18 +560,21 @@ class QueryScheduler:
                     continue
                 stepped = True
                 batch = pipe.inflight[0]
-                t0 = time.perf_counter()
+                t0 = obs.clock()
                 done = batch.future.step()
+                dt = obs.clock() - t0
                 self.stats.worker_busy_s[wid] = (
-                    self.stats.worker_busy_s.get(wid, 0.0)
-                    + time.perf_counter() - t0)
+                    self.stats.worker_busy_s.get(wid, 0.0) + dt)
+                obs.span_at("solve", t0, dt, worker=wid,
+                            epoch=batch.epoch, k=batch.k,
+                            tasks=len(batch.tasks), done=done)
                 if done:
                     pipe.inflight.popleft()
                     self._deliver(batch, pipe)
                     progressed = True
             if not stepped:
                 break
-        now = time.perf_counter()
+        now = obs.clock()
         self.stats.working_s += now - t_begin
         dt = now - t_begin
         if self._tick_samples == 0:
@@ -580,11 +599,11 @@ class QueryScheduler:
         """
         if self.pipeline:
             return self._tick_pipeline()
-        t0 = time.perf_counter()
+        t0 = obs.clock()
         n_fin = len(self.finished)
         self._admit()
         if not self.active:
-            self.clock += time.perf_counter() - t0
+            self.clock += obs.clock() - t0
             for tk in self.finished[n_fin:]:
                 tk.finished_at = self.clock
             return self.finished[n_fin:]
@@ -621,28 +640,34 @@ class QueryScheduler:
             self.stats.batches_dispatched += 1
             self.stats.max_inflight_batches = max(
                 self.stats.max_inflight_batches, 1)
-            tw0 = time.perf_counter()
+            tw0 = obs.clock()
             results.setdefault((k, epoch), {}).update(
                 self.cluster.workers[wid].execute(list(tasks), k,
                                                   epoch=epoch)
             )
+            tw = obs.clock() - tw0
             self.stats.worker_busy_s[wid] = (
-                self.stats.worker_busy_s.get(wid, 0.0)
-                + time.perf_counter() - tw0)
+                self.stats.worker_busy_s.get(wid, 0.0) + tw)
+            obs.span_at("solve", tw0, tw, worker=wid, epoch=epoch, k=k,
+                        tasks=len(tasks))
         # scatter: per-query segment lists, one KSP-DG step each
         still_active = []
         for tk, pair_gids in gathered:
             req = tk._request
+            ts0 = obs.clock()
             seg_lists = merge_segments(req.pairs, pair_gids,
                                        results.get((req.k, tk.epoch), {}),
                                        req.k)
             req.stats.refine_tasks += len(req.pairs)
             tk.ticks += 1
             self._advance(tk, seg_lists)
+            obs.span_at("splice", ts0, obs.clock() - ts0, qid=tk.qid,
+                        pairs=len(req.pairs), iteration=tk.ticks,
+                        done=tk.done)
             if not tk.done:
                 still_active.append(tk)
         self.active = still_active
-        dt = time.perf_counter() - t0
+        dt = obs.clock() - t0
         self.clock += dt
         self.stats.working_s += dt
         # EWMA over WORKING ticks only — idle ticks are ~free and would

@@ -35,6 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from .layout import JNP_LAYOUT, PALLAS_LAYOUT, SlabLayout
 
 __all__ = ["SolverBackend", "JnpBackend", "PallasBackend"]
@@ -91,9 +93,16 @@ class JnpBackend(SolverBackend):
         from .yen_engine import grouped_solver
 
         S, J, z = init.shape
-        return grouped_solver(S, J, z, donate=self._donate)(
+        t0 = obs.clock()
+        out = grouped_solver(S, J, z, donate=self._donate)(
             adj, init, banned_v, spur_onehot, banned_next, cap
         )
+        # dispatch cost only — the solve is async, the device keeps
+        # cooking after this returns; the wait shows up in the caller's
+        # "solve" (future.step) span when the result is forced
+        obs.span_at("solve_grouped", t0, obs.clock() - t0,
+                    backend=self.name, S=S, J=J, z=z)
+        return out
 
 
 @functools.lru_cache(maxsize=None)
@@ -167,6 +176,11 @@ class PallasBackend(SolverBackend):
     def solve_grouped(self, adj, init, banned_v, spur_onehot, banned_next,
                       cap):
         S, J, z = init.shape
-        return _pallas_grouped_solver(
+        t0 = obs.clock()
+        out = _pallas_grouped_solver(
             S, J, z, self._interpret, donate=self._donate
         )(adj, init, banned_v, spur_onehot, banned_next, cap)
+        obs.span_at("solve_grouped", t0, obs.clock() - t0,
+                    backend=self.name, S=S, J=J, z=z,
+                    interpret=self._interpret)
+        return out

@@ -106,8 +106,20 @@ def main():
         "(0.05) is deliberately more aggressive than ServiceConfig's "
         "general-purpose 0.3",
     )
+    ap.add_argument(
+        "--trace", metavar="PATH", default=None,
+        help="capture a Chrome-trace/Perfetto JSON of the whole run "
+        "(admission, queue wait, dispatch, device solve, host splice, "
+        "epoch prepare/commit as per-worker timelines) to this path; "
+        "open at https://ui.perfetto.dev",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.trace:
+        from repro import obs
+
+        obs.enable(trace=True)
 
     mesh = None
     engine = args.engine
@@ -215,6 +227,12 @@ def main():
               f"(revived workers replayed missed batches before serving)")
     if total_empty:
         print(f"WARNING: {total_empty} queries returned no paths")
+    if args.trace:
+        from repro import obs
+
+        n_events = obs.export(args.trace)
+        print(f"trace: {n_events} events → {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
     print("serving run complete — non-truncated queries exact against their epoch")
 
 

@@ -34,11 +34,14 @@ batch/scaleout benchmarks — construct a ``KSPService`` from a
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
+import json
 from collections import deque
 
 import numpy as np
 
+from repro import obs
 from repro.core.dtlp import DTLP
 from repro.core.graph import dedupe_updates
 from repro.dist.cluster import Cluster
@@ -112,6 +115,45 @@ class KSPService:
         # clock, enqueue → epoch commit) — the streaming benchmark's
         # freshness metric; barrier mode records it too
         self.update_lags: list[float] = []
+        # one export surface over every layer's accounting: the Stats
+        # dataclasses register as providers (live views — snapshot()
+        # reads their CURRENT fields), measurements go to histograms
+        self.registry = obs.MetricsRegistry()
+        self.registry.provider("service", lambda: {
+            **dataclasses.asdict(self.stats),
+            "rejected": self.stats.rejected,
+        })
+        self.registry.provider("scheduler", lambda: {
+            **dataclasses.asdict(self.scheduler.stats),
+            "tasks_deduped": self.scheduler.stats.tasks_deduped,
+            "idle_fracs": self.scheduler.stats.idle_fracs(),
+            "tick_latency_ewma_ms": self.scheduler.tick_latency_ewma * 1e3,
+        })
+        self.registry.provider("workers", lambda: [
+            {
+                "wid": w.wid,
+                **dataclasses.asdict(w.stats),
+                "alive": w.alive,
+                "slow": w.slow,
+                "auto_benched": w.auto_benched,
+            }
+            for w in self.cluster.workers
+        ])
+        self.registry.provider("cluster", lambda: {
+            "engine": self.cluster.engine,
+            "n_workers": self.cluster.n_workers,
+            "epoch": self.cluster.epoch,
+            "reissues": self.cluster.reissues,
+            "resyncs": self.resyncs,
+            "auto_slowed": self.cluster.auto_slowed,
+            "auto_recovered": self.cluster.auto_recovered,
+        })
+        self._lat_hist = self.registry.histogram("query_latency_ms")
+        self._lag_hist = self.registry.histogram("update_lag_ms")
+        # consecutive deadline rejections with no admission in between:
+        # the rejection-storm trigger for a flight-recorder dump
+        self._deadline_streak = 0
+        self.flight_dumps: list[dict] = []
 
     # ------------------------------------------------------- construction
     @classmethod
@@ -145,12 +187,80 @@ class KSPService:
             straggler_min_tasks=cfg.straggler_min_tasks,
             **build_kw,
         )
-        return cls(config=cfg, cluster=cluster)
+        svc = cls(config=cfg, cluster=cluster)
+        state = snap.get("service")
+        if state is not None:  # format ≥ 4: cumulative metrics round-trip
+            svc.stats = ServiceStats(**state["stats"])
+            bs = dict(state["scheduler_stats"])
+            # worker_busy_s keys may come back as strings (a snapshot
+            # that went through JSON); BatchStats wants int wids
+            bs["worker_busy_s"] = {
+                int(w): float(s)
+                for w, s in bs.get("worker_busy_s", {}).items()
+            }
+            svc.scheduler.stats = type(svc.scheduler.stats)(**bs)
+            svc.update_lags = [float(x) for x in state.get("update_lags", [])]
+            svc._apply_ewma = float(state.get("apply_ewma", 0.0))
+            for name, hsnap in state.get("histograms", {}).items():
+                svc.registry.histogram(
+                    name, bounds=hsnap["bounds"]
+                ).load(hsnap)
+        return svc
 
     def checkpoint(self) -> dict:
-        return self.cluster.checkpoint()
+        """Cluster snapshot plus the service's cumulative metrics.
+
+        Format 4 = the cluster's format-3 snapshot (placement, worker
+        state, epoch, weights — see ``Cluster.checkpoint``) with a
+        ``"service"`` section so a restored service's ``snapshot()``
+        continues monotonically from the original's counters instead of
+        silently resetting the fleet's history.
+        """
+        snap = self.cluster.checkpoint()
+        snap["format"] = 4
+        snap["service"] = {
+            "stats": dataclasses.asdict(self.stats),
+            "scheduler_stats": dataclasses.asdict(self.scheduler.stats),
+            "update_lags": list(self.update_lags),
+            "apply_ewma": self._apply_ewma,
+            "histograms": {
+                h.name: h.snapshot()
+                for h in (self._lat_hist, self._lag_hist)
+            },
+        }
+        return snap
 
     # ----------------------------------------------------------- telemetry
+    def snapshot(self) -> dict:
+        """One JSON-serializable view of every layer's accounting.
+
+        Merges ``ServiceStats`` + scheduler ``BatchStats`` (with derived
+        idle fractions and dedup counts) + per-worker ``WorkerStats``
+        (resyncs, probation state included) + cluster routing counters +
+        the live latency/lag histograms — the schema
+        ``benchmarks/common.service_row`` flattens into bench rows and
+        flight-recorder dumps attach for post-mortems.
+        """
+        return {"epoch": self.epoch, **self.registry.snapshot()}
+
+    def _flight_dump(self, reason: str) -> dict | None:
+        """Take one flight-recorder dump (when obs is recording): the
+        recent per-track window plus the metrics snapshot, kept on
+        ``self.flight_dumps`` and appended to ``config.flight_dump_path``
+        (JSON lines) when set."""
+        dump = obs.flight_dump(reason)
+        if dump is None:
+            return None
+        dump["snapshot"] = self.snapshot()
+        self.flight_dumps.append(dump)
+        self.stats.flight_dumps += 1
+        path = self.config.flight_dump_path
+        if path:
+            with open(path, "a") as f:
+                json.dump(dump, f)
+                f.write("\n")
+        return dump
+
     @property
     def epoch(self) -> int:
         """Current graph epoch (one bump per applied UpdateBatch)."""
@@ -208,10 +318,17 @@ class KSPService:
             predicted = self.predicted_wait_ms()
             if predicted > req.deadline_ms:
                 self.stats.rejected_deadline += 1
+                self._deadline_streak += 1
+                if self._deadline_streak == self.config.reject_storm:
+                    # a storm: the service has been refusing every
+                    # arrival for a while — capture what the workers
+                    # were doing while the backlog stopped draining
+                    self._flight_dump("deadline_storm")
                 raise DeadlineExceeded(
                     f"predicted queue delay {predicted:.1f}ms exceeds "
                     f"deadline {req.deadline_ms:.1f}ms"
                 )
+        self._deadline_streak = 0
         ticket = ServiceTicket(
             qid=next(self._qid), request=req,
             arrival=self.scheduler.clock if arrival is None else float(arrival),
@@ -262,7 +379,20 @@ class KSPService:
     def tick(self) -> list[ServiceTicket]:
         """One service round: update bookkeeping (barrier drain or
         streaming handoff, per ``config.update_mode``), held-query
-        release, one scheduler tick.  Returns the tickets completed."""
+        release, one scheduler tick.  Returns the tickets completed.
+
+        Any exception escaping the round — ``StaleReplicaError``, data
+        loss, an engine failure — first triggers a flight-recorder dump
+        (when obs is recording), so the last thing every worker did
+        before the failure is on disk before the stack unwinds.
+        """
+        try:
+            return self._tick()
+        except Exception as e:
+            self._flight_dump(f"exception:{type(e).__name__}")
+            raise
+
+    def _tick(self) -> list[ServiceTicket]:
         if self.config.update_mode == "streaming":
             self._stream_updates()
         else:
@@ -280,6 +410,7 @@ class KSPService:
                 stats=tk.stats,
                 latency_ms=float(tk.latency or 0.0) * 1e3,
             )
+            self._lat_hist.observe(ticket.result.latency_ms)
             self.stats.completed += 1
             out.append(ticket)
         return out
@@ -298,7 +429,7 @@ class KSPService:
             enq = self._update_clocks.popleft()
             dt = self.cluster.apply_updates(batch.eids, batch.new_w)
             self._observe_apply(dt)
-            self.update_lags.append(max(0.0, self.scheduler.clock - enq))
+            self._observe_lag(max(0.0, self.scheduler.clock - enq))
             self.stats.update_batches += 1
         self._maybe_rebaseline()
         self.scheduler.freeze_admission = False
@@ -334,7 +465,7 @@ class KSPService:
         )
         self._observe_apply(prep_s + commit_s)
         for enq in clocks:
-            self.update_lags.append(max(0.0, self.scheduler.clock - enq))
+            self._observe_lag(max(0.0, self.scheduler.clock - enq))
         self.stats.update_batches += len(batches)
         self.stats.coalesced_batches += len(batches) - 1
         # drift rebaseline fires at the commit, no drain needed: weights
@@ -345,6 +476,10 @@ class KSPService:
     def _observe_apply(self, dt: float) -> None:
         self._apply_ewma = (dt if self._apply_ewma == 0.0
                             else 0.3 * dt + 0.7 * self._apply_ewma)
+
+    def _observe_lag(self, lag_s: float) -> None:
+        self.update_lags.append(lag_s)
+        self._lag_hist.observe(lag_s * 1e3)
 
     def _maybe_rebaseline(self) -> None:
         drift_gate = self.config.rebaseline_drift

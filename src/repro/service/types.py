@@ -187,6 +187,13 @@ class ServiceConfig:
     # dispatched-but-unforced batches each worker pipe may hold (2 =
     # double-buffered: one solving on device, one filling on host)
     pipeline_depth: int = 2
+    # consecutive DeadlineExceeded rejections (no successful admission
+    # between them) that trigger one flight-recorder dump — the
+    # "rejection storm" post-mortem signal; 0 disables
+    reject_storm: int = 50
+    # where flight-recorder dumps are written (JSON); None keeps them
+    # in-memory only (KSPService.flight_dumps)
+    flight_dump_path: str | None = None
     # how UpdateBatches land: "barrier" (the reference) freezes
     # admission and drains every in-flight query before applying;
     # "streaming" prepares the next epoch (incremental index deltas +
@@ -231,6 +238,7 @@ class ServiceStats:
     rebaselines: int = 0  # drift-triggered DTLP rebaselines
     coalesced_batches: int = 0  # queued batches merged into one commit
     handoff_waits: int = 0  # streaming commits deferred: older epoch in flight
+    flight_dumps: int = 0  # post-mortem flight-recorder dumps taken
 
     @property
     def rejected(self) -> int:

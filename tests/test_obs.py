@@ -1,0 +1,453 @@
+"""repro.obs: span API and Chrome-trace export, metrics registry,
+flight-recorder rings, and the service-level wiring — one snapshot
+schema, cumulative metrics across checkpoint/restore, post-mortem dumps
+on exceptions and rejection storms."""
+
+import json
+
+import pytest
+
+from repro import obs
+from repro.core.dtlp import DTLP
+from repro.data.roadnet import WeightUpdateStream, grid_road_network
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import Record
+from repro.service import (
+    DeadlineExceeded,
+    KSPService,
+    QueryRequest,
+    ServiceConfig,
+    UpdateBatch,
+)
+
+
+@pytest.fixture(autouse=True)
+def _obs_reset():
+    """obs state is process-global: every test starts and ends disabled."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def build_service(engine="dense_bf", workers=2, seed=2, **cfg_kw):
+    g = grid_road_network(10, 10, seed=seed)
+    d = DTLP.build(g, z=16, xi=4)
+    cfg = ServiceConfig(engine=engine, n_workers=workers,
+                        straggler_factor=None, **cfg_kw)
+    return g, KSPService(d, cfg)
+
+
+# --------------------------------------------------------------- span API
+class TestSpanAPI:
+    def test_nesting_attrs_and_timing(self):
+        col = obs.enable(trace=True)
+        with obs.span("outer", qid=7) as s:
+            s.set(stage="late")
+            with obs.span("inner"):
+                pass
+        # inner exits (and records) first; both carry their attrs
+        inner, outer = col.spans("inner")[0], col.spans("outer")[0]
+        assert col.events[0].name == "inner"
+        assert outer.attrs == {"qid": 7, "stage": "late"}
+        # the inner interval nests inside the outer one
+        assert outer.ts <= inner.ts
+        assert inner.ts + inner.dur <= outer.ts + outer.dur + 1e-9
+
+    def test_span_at_records_the_callers_interval(self):
+        col = obs.enable(trace=True)
+        obs.span_at("solve", 5.0, 2.0, worker=3, k=4)
+        (r,) = col.spans("solve")
+        assert (r.ts, r.dur) == (5.0, 2.0)
+        assert r.tid == 4  # worker attr routes to tid 1 + wid
+        assert r.attrs["k"] == 4
+
+    def test_event_is_instant(self):
+        col = obs.enable(trace=True)
+        obs.event("ksp_iteration", iteration=1)
+        (r,) = col.events
+        assert r.kind == "event" and r.dur == 0.0 and r.tid == 0
+
+    def test_worker_scope_sets_ambient_track_and_restores(self):
+        col = obs.enable(trace=True)
+        obs.event("a")
+        with obs.worker_scope(1):
+            obs.event("b")
+            with obs.worker_scope(0):
+                obs.event("c")
+            obs.event("d")
+        obs.event("e")
+        assert [r.tid for r in col.events] == [0, 2, 1, 2, 0]
+
+    def test_explicit_worker_attr_beats_ambient_scope(self):
+        col = obs.enable(trace=True)
+        with obs.worker_scope(0):
+            obs.span_at("x", 0.0, 1.0, worker=5)
+        assert col.events[0].tid == 6
+
+    def test_traced_is_late_binding(self):
+        @obs.traced()
+        def refine(x):
+            return x * 2
+
+        assert refine(3) == 6  # disabled: pure passthrough
+        col = obs.enable(trace=True)
+        assert refine(4) == 8
+        (r,) = col.spans()
+        assert r.name == refine.__qualname__ and r.name.endswith("refine")
+
+    def test_traced_explicit_name_and_attrs(self):
+        col = obs.enable(trace=True)
+
+        @obs.traced("stage", phase="commit")
+        def f():
+            return 1
+
+        f()
+        (r,) = col.spans("stage")
+        assert r.attrs["phase"] == "commit"
+
+    def test_span_stamps_error_attr_on_exception(self):
+        col = obs.enable(trace=True)
+        with pytest.raises(ValueError):
+            with obs.span("boom"):
+                raise ValueError("x")
+        assert col.spans("boom")[0].attrs["error"] == "ValueError"
+
+
+# ----------------------------------------------------------- disabled path
+class TestDisabledNoop:
+    def test_span_returns_the_singleton(self):
+        assert obs.span("a") is obs.span("b") is obs.NOOP_SPAN
+        with obs.span("c") as s:
+            assert s.set(anything=1) is s  # chainable, still a no-op
+
+    def test_record_calls_are_silent(self):
+        obs.span_at("x", 0.0, 1.0, worker=2)
+        obs.event("y")
+        assert obs.get_collector() is None and not obs.enabled()
+
+    def test_traced_passthrough_preserves_function(self):
+        def g(a, b=2):
+            """doc"""
+            return a + b
+
+        wrapped = obs.traced()(g)
+        assert wrapped(1) == 3
+        assert wrapped.__name__ == "g" and wrapped.__doc__ == "doc"
+
+    def test_flight_dump_none_and_export_raises(self):
+        assert obs.flight_dump("why") is None
+        with pytest.raises(RuntimeError, match="not enabled"):
+            obs.export("/tmp/never.json")
+
+    def test_enable_disable_round_trip(self):
+        col = obs.enable(trace=True)
+        obs.event("x")
+        assert obs.get_collector() is col and len(col) == 1
+        obs.disable()
+        obs.event("y")  # dropped, not an error
+        assert len(col) == 1
+
+
+# ---------------------------------------------------------- chrome export
+class TestChromeExport:
+    def _capture(self):
+        col = obs.enable(trace=True)
+        t = col.t0
+        obs.span_at("admit", t + 0.001, 0.002, qid=0)
+        obs.span_at("dispatch", t + 0.003, 0.001, worker=0)
+        obs.span_at("solve", t + 0.004, 0.005, worker=0)
+        obs.span_at("splice", t + 0.010, 0.001, qid=0)
+        obs.event("ksp_iteration", iteration=1)
+        return col
+
+    def test_schema(self, tmp_path):
+        self._capture()
+        path = tmp_path / "trace.json"
+        n = obs.export(str(path))
+        doc = json.loads(path.read_text())
+        assert doc["displayTimeUnit"] == "ms"
+        events = doc["traceEvents"]
+        assert n == sum(1 for e in events if e["ph"] != "M") == 5
+        meta = [e for e in events if e["ph"] == "M"]
+        names = {e["args"]["name"] for e in meta
+                 if e["name"] == "thread_name"}
+        assert {"service", "worker-0"} <= names
+        assert any(e["name"] == "process_name" for e in meta)
+        last = {}
+        for e in events:
+            assert e["pid"] == 1 and "tid" in e and "name" in e
+            if e["ph"] == "M":
+                continue
+            assert e["ts"] >= last.get(e["tid"], -1.0)  # monotone per tid
+            last[e["tid"]] = e["ts"]
+            if e["ph"] == "X":
+                assert e["dur"] >= 0.0
+            else:
+                assert e["ph"] == "i" and e["s"] == "t"
+        # worker spans landed on the worker lane, service on tid 0
+        by_name = {e["name"]: e for e in events if e["ph"] != "M"}
+        assert by_name["solve"]["tid"] == 1
+        assert by_name["admit"]["tid"] == 0
+
+    def test_args_are_json_clean(self, tmp_path):
+        import numpy as np
+
+        obs.enable(trace=True)
+        obs.span_at("x", 0.0, 1.0, n=np.int64(3), w=np.float32(0.5),
+                    ids=np.arange(2))
+        path = tmp_path / "t.json"
+        obs.export(str(path))
+        (ev,) = [e for e in json.loads(path.read_text())["traceEvents"]
+                 if e["ph"] == "X"]
+        assert ev["args"] == {"n": 3, "w": 0.5, "ids": [0, 1]}
+
+
+# --------------------------------------------------------- flight recorder
+class TestFlightRecorder:
+    def test_ring_evicts_fifo(self):
+        fr = FlightRecorder(capacity=4)
+        for i in range(6):
+            fr.record(Record("event", f"e{i}", float(i), 0.0, 0, {}))
+        assert fr.recorded == 6
+        (ring,) = fr.rings.values()
+        # strict FIFO: the two oldest evicted, order preserved
+        assert [r.name for r in ring] == ["e2", "e3", "e4", "e5"]
+
+    def test_tracks_are_independent_rings(self):
+        fr = FlightRecorder(capacity=2)
+        for tid in (0, 1, 1, 1):
+            fr.record(Record("event", f"t{tid}", 0.0, 0.0, tid, {}))
+        assert len(fr.rings[0]) == 1 and len(fr.rings[1]) == 2
+
+    def test_flight_only_mode_keeps_memory_bounded(self):
+        col = obs.enable(trace=False, ring_capacity=3)
+        for i in range(10):
+            obs.event("e", i=i)
+        assert len(col) == 0  # nothing kept for export ...
+        dump = obs.flight_dump("test")
+        assert dump["recorded"] == 10 and dump["capacity"] == 3
+        assert [r["attrs"]["i"] for r in dump["tracks"]["service"]] == \
+            [7, 8, 9]  # ... only the bounded recent window
+        json.dumps(dump)  # serializable as-is
+
+    def test_dump_track_names_match_trace_mapping(self):
+        obs.enable(trace=False)
+        obs.event("a")
+        obs.span_at("b", 0.0, 1.0, worker=1)
+        dump = obs.flight_dump("names")
+        assert set(dump["tracks"]) == {"service", "worker-1"}
+        assert dump["reason"] == "names"
+
+
+# ----------------------------------------------------------------- metrics
+class TestMetrics:
+    def test_counter_gauge_merge(self):
+        a, b = obs.Counter("c"), obs.Counter("c")
+        a.inc(), b.inc(2)
+        a.merge(b)
+        assert a.snapshot() == 3
+        g1, g2 = obs.Gauge("g"), obs.Gauge("g")
+        g1.set(5.0), g1.set(2.0), g2.set(3.0)
+        g1.merge(g2)
+        assert g1.snapshot() == {"value": 3.0, "peak": 5.0}
+
+    def test_histogram_observe_merge_percentile(self):
+        h1 = obs.Histogram("h", bounds=(1.0, 10.0, 100.0))
+        h2 = obs.Histogram("h", bounds=(1.0, 10.0, 100.0))
+        for v in (0.5, 5.0, 5.0):
+            h1.observe(v)
+        h2.observe(500.0)
+        h1.merge(h2)
+        snap = h1.snapshot()
+        assert snap["count"] == 4 and snap["counts"] == [1, 2, 0, 1]
+        assert snap["min"] == 0.5 and snap["max"] == 500.0
+        assert h1.percentile(50) == 10.0
+        assert h1.percentile(100) == 500.0  # overflow reports the max
+        with pytest.raises(ValueError, match="bounds"):
+            h1.merge(obs.Histogram("h", bounds=(1.0, 2.0)))
+
+    def test_histogram_load_round_trips_snapshot(self):
+        h = obs.Histogram("h", bounds=(1.0, 10.0))
+        for v in (0.5, 5.0, 50.0):
+            h.observe(v)
+        snap = json.loads(json.dumps(h.snapshot()))
+        h2 = obs.Histogram("h", bounds=(1.0, 10.0))
+        h2.load(snap)
+        assert h2.snapshot() == h.snapshot()
+        h2.observe(2.0)
+        assert h2.count == 4  # keeps accumulating after restore
+        with pytest.raises(ValueError, match="bounds differ"):
+            obs.Histogram("h", bounds=(1.0,)).load(snap)
+
+    def test_registry_providers_and_metric_reuse(self):
+        reg = obs.MetricsRegistry()
+        state = {"done": 0}
+        reg.provider("svc", lambda: state)
+        assert reg.histogram("lat") is reg.histogram("lat")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.counter("lat")
+        reg.counter("n").inc(2)
+        state["done"] = 5  # providers are live views
+        snap = reg.snapshot()
+        assert snap["svc"] == {"done": 5}
+        assert snap["metrics"]["n"] == 2
+        json.dumps(snap)
+
+
+# ------------------------------------------------------- service wiring
+class TestServiceObs:
+    def _run(self, svc, g, n=3, k=3, seed=5):
+        import numpy as np
+
+        rng = np.random.default_rng(seed)
+        qs = [tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+              for _ in range(n)]
+        return svc.replay([QueryRequest(s, t, k) for s, t in qs])
+
+    def test_three_query_trace_covers_every_pump_stage(self, tmp_path):
+        """The tentpole's acceptance trace: 3 queries through 2 workers
+        must land admission/queue-wait/splice on the service track and
+        dispatch/solve/execute (+ the backend's solve_grouped) on EVERY
+        worker lane."""
+        g, svc = build_service(engine="dense_bf", workers=2)
+        col = obs.enable(trace=True)
+        tickets = self._run(svc, g, n=3)
+        assert all(tk.result is not None for tk in tickets)
+
+        by_tid = {}
+        for r in col.events:
+            by_tid.setdefault(r.tid, set()).add(r.name)
+        assert {"admit", "queue_wait", "splice"} <= by_tid[0]
+        worker_tids = sorted(t for t in by_tid if t > 0)
+        assert worker_tids == [1, 2]  # both workers drew tasks
+        for tid in worker_tids:
+            assert {"dispatch", "solve", "execute", "solve_grouped"} \
+                <= by_tid[tid]
+        # ... and the per-query spans carry their qids
+        qids = {r.attrs["qid"] for r in col.spans("splice")}
+        assert qids == {tk._ticket.qid for tk in tickets}
+
+        path = tmp_path / "t.json"
+        assert obs.export(str(path)) == len(col.events)
+
+    def test_streaming_update_emits_epoch_handoff_spans(self):
+        g, svc = build_service(update_mode="streaming")
+        stream = WeightUpdateStream(g, alpha=0.4, tau=0.5, seed=6)
+        col = obs.enable(trace=True)
+        svc.update(UpdateBatch(*stream.next_batch()))
+        names = {r.name for r in col.events}
+        assert {"epoch_prepare", "epoch_commit",
+                "prepare_patch", "commit_patch"} <= names
+        # the per-worker patch spans land on the worker lanes
+        assert {r.tid for r in col.spans("commit_patch")} == {1, 2}
+        (commit,) = col.spans("epoch_commit")
+        assert commit.attrs["epoch"] == svc.epoch == 1
+
+    def test_snapshot_is_one_json_schema_over_every_layer(self):
+        g, svc = build_service(engine="pyen", workers=2)
+        self._run(svc, g, n=3)
+        snap = svc.snapshot()
+        json.dumps(snap)  # the whole point: one json.dump, no leaks
+        assert set(snap) >= {"epoch", "service", "scheduler", "workers",
+                             "cluster", "metrics"}
+        assert snap["service"]["completed"] == 3
+        assert snap["scheduler"]["ticks"] > 0
+        assert len(snap["workers"]) == 2
+        for w in snap["workers"]:
+            assert {"wid", "tasks", "resyncs", "alive", "slow",
+                    "auto_benched"} <= set(w)
+        assert snap["cluster"]["resyncs"] == 0
+        assert snap["metrics"]["query_latency_ms"]["count"] == 3
+
+    def test_checkpoint_restores_cumulative_metrics_monotone(self):
+        """Format-4 regression: restore then snapshot() must CONTINUE the
+        counters and histograms, not restart them from zero."""
+        g, svc = build_service(engine="pyen", workers=2, seed=7)
+        stream = WeightUpdateStream(g, alpha=0.4, tau=0.5, seed=11)
+        svc.update(UpdateBatch(*stream.next_batch()))
+        self._run(svc, g, n=3)
+        before = svc.snapshot()
+        snap = svc.checkpoint()
+        assert snap["format"] == 4
+        # the service section must survive serialization (str keys etc.)
+        snap["service"] = json.loads(json.dumps(snap["service"]))
+
+        svc2 = KSPService.restore(
+            snap, lambda: grid_road_network(10, 10, seed=7),
+            ServiceConfig(engine="pyen", n_workers=2,
+                          straggler_factor=None, z=16, xi=4),
+        )
+        after0 = svc2.snapshot()
+        assert after0["service"] == before["service"]
+        assert after0["metrics"]["query_latency_ms"] == \
+            before["metrics"]["query_latency_ms"]
+        assert after0["metrics"]["update_lag_ms"]["count"] == 1
+
+        self._run(svc2, g, n=2, seed=9)
+        after = svc2.snapshot()
+        assert after["service"]["completed"] == \
+            before["service"]["completed"] + 2
+        assert after["metrics"]["query_latency_ms"]["count"] == \
+            before["metrics"]["query_latency_ms"]["count"] + 2
+
+    def test_old_format_checkpoint_still_restores(self):
+        """A format-3 snapshot (no service section) must load cleanly —
+        metrics just start fresh."""
+        g, svc = build_service(engine="pyen", workers=2, seed=7)
+        snap = svc.checkpoint()
+        snap.pop("service")
+        snap["format"] = 3
+        svc2 = KSPService.restore(
+            snap, lambda: grid_road_network(10, 10, seed=7),
+            ServiceConfig(engine="pyen", n_workers=2, z=16, xi=4),
+        )
+        assert svc2.snapshot()["service"]["completed"] == 0
+
+    def test_exception_in_tick_dumps_the_flight_recorder(self, tmp_path):
+        path = tmp_path / "dumps.jsonl"
+        g, svc = build_service(engine="pyen", workers=2,
+                               flight_dump_path=str(path))
+        self._run(svc, g, n=1)  # populate the rings
+        obs_col = obs.enable(trace=False)
+        assert obs_col is obs.get_collector()
+        svc.kill(0)
+        svc.kill(1)
+        svc.submit(QueryRequest(0, g.n - 1, 2))
+        with pytest.raises(Exception):
+            for _ in range(50):
+                svc.tick()
+        (dump,) = svc.flight_dumps
+        assert dump["reason"].startswith("exception:")
+        assert "tracks" in dump and "snapshot" in dump
+        assert svc.stats.flight_dumps == 1
+        # ... and the dump also landed on disk, one JSON object per line
+        (line,) = path.read_text().strip().splitlines()
+        assert json.loads(line)["reason"] == dump["reason"]
+
+    def test_deadline_storm_dumps_once(self):
+        g, svc = build_service(engine="pyen", workers=2, reject_storm=2)
+        obs.enable(trace=False)
+        # make the SLO predictor see a long queue: nonzero tick EWMA ×
+        # queued depth, the admission signal the storm counter sits on
+        svc.scheduler.tick_latency_ewma = 1.0
+        svc.submit(QueryRequest(0, g.n - 1, 2))
+        svc.submit(QueryRequest(1, g.n - 2, 2))
+        for _ in range(3):  # 3 straight rejections, storm threshold 2
+            with pytest.raises(DeadlineExceeded):
+                svc.submit(QueryRequest(2, g.n - 3, 2, deadline_ms=1.0))
+        # exactly ONE dump: at the threshold, not on every rejection
+        assert [d["reason"] for d in svc.flight_dumps] == ["deadline_storm"]
+        assert svc.stats.rejected_deadline == 3
+        # a successful admission resets the streak
+        svc.submit(QueryRequest(3, g.n - 4, 2))
+        assert svc._deadline_streak == 0
+
+    def test_dumps_are_noop_while_obs_disabled(self):
+        g, svc = build_service(engine="pyen", workers=2, reject_storm=1)
+        svc.scheduler.tick_latency_ewma = 1.0
+        svc.submit(QueryRequest(0, g.n - 1, 2))
+        svc.submit(QueryRequest(1, g.n - 2, 2))
+        with pytest.raises(DeadlineExceeded):
+            svc.submit(QueryRequest(2, g.n - 3, 2, deadline_ms=1.0))
+        assert svc.flight_dumps == [] and svc.stats.flight_dumps == 0
