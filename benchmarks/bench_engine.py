@@ -113,13 +113,14 @@ def bench_backend_compare(quick=True, backend="pallas-interpret",
     batch = stream.next_batch()
     cut = n_q // 2
 
-    def run(engine):
+    def run(engine, mesh=None):
         # fresh graph per engine: updates mutate weights/epoch in place,
         # and both engines must replay the trace from the same epoch 0
         g_run = grid_road_network(rows_cols, rows_cols, seed=0)
         svc = KSPService(
             DTLP.build(g_run, z=12, xi=4),
-            ServiceConfig(engine=engine, n_workers=2, max_in_flight=4),
+            ServiceConfig(engine=engine, n_workers=2, max_in_flight=4,
+                          mesh=mesh),
         )
         svc.replay([QueryRequest(s, t, 3) for s, t in qs[:cut]])  # warm jit
         t0 = time.perf_counter()
@@ -144,14 +145,37 @@ def bench_backend_compare(quick=True, backend="pallas-interpret",
         note="interpret-mode Pallas timing is NOT hardware-indicative; "
              "the row records parity + jnp-vs-pallas-interpret cost",
     )]
+    # mesh legs: the same trace under shard_map across the host's
+    # devices, gated byte-identical to the single-device reference
+    if jax.device_count() >= 2:
+        from repro.launch.mesh import make_host_mesh
+
+        n_dev = min(jax.device_count(), 2 if smoke else jax.device_count())
+        mesh = make_host_mesh(n_dev)
+        for eng in ("dense_bf", engine):
+            m_got, m_s = run(eng, mesh=mesh)
+            rows.append(dict(
+                bench="backend_compare", backend=f"{eng}-mesh",
+                engine=eng, mesh=f"{n_dev}x1", n_queries=n_q,
+                update_batches=1, dense_bf_s=round(base_s, 3),
+                backend_s=round(m_s, 3),
+                qps_dense_bf=round(n_q / base_s, 2),
+                qps_backend=round(n_q / m_s, 2),
+                identical_paths_and_epochs=m_got == want,
+            ))
+            match = match and m_got == want
     emit("engine", rows)
     if not match:
+        bad = [r["backend"] for r in rows
+               if not r["identical_paths_and_epochs"]]
         raise SystemExit(
-            f"DIVERGENCE: engine {engine!r} ({backend}) did not reproduce "
+            f"DIVERGENCE: {', '.join(bad)} did not reproduce "
             "dense_bf paths/epochs on the smoke trace"
         )
+    legs = ", ".join(r["backend"] for r in rows[1:])
     print(f"backend gate OK: {engine} byte-identical to dense_bf "
-          f"({n_q} queries across an epoch barrier)")
+          f"({n_q} queries across an epoch barrier"
+          + (f"; mesh legs: {legs}" if legs else "") + ")")
     return rows
 
 

@@ -39,9 +39,11 @@ from repro.service import KSPService, QueryRequest, ServiceConfig
 from .common import RESULTS_DIR, build_network, emit, rand_queries
 
 # the stages one serving trace must show (the tentpole's acceptance
-# criterion: admission → dispatch → solve → splice per-worker timelines)
+# criterion: admission → dispatch → solve → splice per-worker timelines;
+# dispatch_round carries adj_src — whether the round's adjacency came
+# from the device-resident slab mirror or a host re-pack)
 REQUIRED_STAGES = {"admit", "queue_wait", "dispatch", "solve", "splice",
-                   "execute"}
+                   "execute", "dispatch_round"}
 MICRO_CALLS = 200_000
 
 
@@ -76,6 +78,7 @@ def _validate_trace(path) -> dict:
     per_tid_last: dict = {}
     names: set = set()
     n_spans = 0
+    n_device_rounds = 0
     for e in events:
         for field in ("ph", "pid", "tid", "name"):
             if field not in e:
@@ -98,11 +101,26 @@ def _validate_trace(path) -> dict:
             )
         per_tid_last[e["tid"]] = e["ts"]
         names.add(e["name"])
+        if e["name"] == "dispatch_round":
+            src = e.get("args", {}).get("adj_src")
+            if src not in ("device", "host"):
+                raise SystemExit(
+                    f"trace schema: dispatch_round span missing adj_src "
+                    f"device/host arg: {e}"
+                )
+            if src == "device":
+                n_device_rounds += 1
     missing = REQUIRED_STAGES - names
     if missing:
         raise SystemExit(
             f"trace is missing serving stages: {sorted(missing)} "
             f"(got {sorted(names)})"
+        )
+    if n_device_rounds == 0:
+        raise SystemExit(
+            "trace schema: no dispatch_round span sourced adjacency from "
+            "the device-resident slab mirror (adj_src='device') — the "
+            "steady-state query path lost device residency"
         )
     return {"events": len(events), "spans": n_spans,
             "tracks": len(per_tid_last)}

@@ -185,7 +185,8 @@ class Worker:
     """
 
     def __init__(self, wid: int, dtlp: DTLP, gids, spec: EngineSpec,
-                 solver=None, s_multiple: int = 1):
+                 solver=None, s_multiple: int = 1, sharding=None,
+                 update_fn=None, mesh_desc=None):
         self.wid = wid
         self.dtlp = dtlp
         self.gids = set(int(g) for g in gids)
@@ -199,6 +200,12 @@ class Worker:
         self.cache = PartialKSPCache()
         self.solver = solver
         self.s_multiple = int(s_multiple)
+        # device mirror config: where the slab lives (None = default
+        # device), how on-device cells are patched (a shard_refine
+        # make_update_fn product on a mesh), and the mesh label for spans
+        self._sharding = sharding
+        self._update_fn = update_fn
+        self._mesh_desc = mesh_desc
         self.epoch = dtlp.epoch
         self.pending: list[np.ndarray] = []  # eid batches missed while dead
         # double-buffered epochs (streaming updates): the slab of the
@@ -217,7 +224,7 @@ class Worker:
         if spec.packs_slab and self.gids:
             # a worker that owns nothing (more workers than subgraph
             # assignments) keeps no slab; it is never routed tasks
-            from repro.engine.dense import pack_subgraphs
+            from repro.engine.dense import pack_subgraphs, place_slab
 
             # all slab geometry (lane alignment, bucket shapes) comes
             # from the engine backend's SlabLayout — never from here
@@ -226,6 +233,14 @@ class Worker:
                 layout=spec.layout, epoch=self.epoch,
             )
             self.row_of = {int(g): i for i, g in enumerate(self.slab.gids)}
+            # stage the slab on device ONCE — every subsequent dispatch
+            # gathers rows from this resident mirror instead of paying a
+            # host→device transfer (device-resident across ticks)
+            t0 = obs.clock()
+            place_slab(self.slab, sharding=sharding, s_multiple=s_multiple)
+            obs.span_at("slab_place", t0, obs.clock() - t0,
+                        worker=self.wid, S=int(self.slab.adj.shape[0]),
+                        z=int(self.slab.z), mesh=mesh_desc)
 
     # ------------------------------------------------------------- refine
     def execute_async(self, tasks, k: int,
@@ -406,11 +421,18 @@ class Worker:
 
         Defaults patch the LIVE slab from the CURRENT graph weights (the
         barrier/resync path); the streaming path passes a shadow slab
-        and the next epoch's weight buffer instead.
+        and the next epoch's weight buffer instead.  The host buffer is
+        patched in place; the device mirror is patched FUNCTIONALLY (a
+        scatter producing a new array), so a shadow slab's mirror never
+        aliases-corrupts the live epoch's — commit stays a pointer swap
+        on device too.
         """
         g = self.dtlp.graph
         slab = self.slab if slab is None else slab
         w = g.w if w is None else w
+        # de-duped effective cell values: parallel edges between a pair
+        # collapse to one min — make_update_fn's scatter contract
+        cells: dict = {}
         for e in np.asarray(eids, dtype=np.int64):
             gid = int(self.dtlp.edge_owner[e])
             row = self.row_of.get(gid)
@@ -420,9 +442,37 @@ class Worker:
             lu = sg.g2l[int(g.edge_u[e])]
             lv = sg.g2l[int(g.edge_v[e])]
             # min over parallel edges between (lu, lv), like the packer
-            slab.adj[row, lu, lv] = self._min_weight(sg, lu, lv, w)
+            val = self._min_weight(sg, lu, lv, w)
+            slab.adj[row, lu, lv] = val
+            cells[(row, lu, lv)] = val
             if not g.directed:
-                slab.adj[row, lv, lu] = self._min_weight(sg, lv, lu, w)
+                rval = self._min_weight(sg, lv, lu, w)
+                slab.adj[row, lv, lu] = rval
+                cells[(row, lv, lu)] = rval
+        if slab.adj_dev is not None and cells:
+            self._patch_device(slab, cells)
+
+    def _patch_device(self, slab, cells: dict) -> None:
+        """Scatter patched cells into the slab's device mirror.
+
+        Batches are padded to a pow2 length with -1 rows (dropped by the
+        scatter) so jit shape buckets are reused across batches; on a
+        mesh, the scatter routes through ``shard_refine.make_update_fn``
+        and each shard applies only the rows it owns.
+        """
+        from repro.engine.dense import scatter_slab_cells
+
+        n = len(cells)
+        n_pad = 1 << (n - 1).bit_length() if n > 1 else 1
+        rows = np.full(n_pad, -1, np.int32)
+        uu = np.zeros(n_pad, np.int32)
+        vv = np.zeros(n_pad, np.int32)
+        ww = np.zeros(n_pad, np.float32)
+        for i, ((r, lu, lv), val) in enumerate(cells.items()):
+            rows[i], uu[i], vv[i], ww[i] = r, lu, lv, float(val)
+        slab.adj_dev = scatter_slab_cells(
+            slab.adj_dev, rows, uu, vv, ww, update_fn=self._update_fn
+        )
 
     def _min_weight(self, sg, lu: int, lv: int, w: np.ndarray) -> np.float32:
         lo, hi = sg.indptr[lu], sg.indptr[lu + 1]
@@ -508,6 +558,9 @@ class Cluster:
         self.placement: Placement = placement
         solver = None
         s_multiple = 1
+        sharding = None
+        update_fn = None
+        mesh_desc = None
         if self.mesh is not None:
             if not self.spec.supports_mesh:
                 raise ValueError(
@@ -516,10 +569,27 @@ class Cluster:
             solver, s_multiple = self.spec.make_mesh_solver(
                 self.mesh, self.mesh_axis
             )
+            # device-resident placement + on-device patching for the
+            # mesh path: slabs live sharded over the S axis across ticks
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            from repro.engine.registry import mesh_axis_names
+            from repro.dist.shard_refine import make_update_fn
+
+            sharding = NamedSharding(
+                self.mesh, PartitionSpec(tuple(mesh_axis_names(self.mesh_axis)))
+            )
+            update_fn = make_update_fn(self.mesh, axis=self.mesh_axis)
+            mesh_desc = "x".join(
+                str(int(self.mesh.shape[a]))
+                for a in mesh_axis_names(self.mesh_axis)
+            )
+        self._mesh_desc = mesh_desc
         self.workers = [
             Worker(
                 w, self.dtlp, self.placement.owned_by(w), self.spec,
                 solver=solver, s_multiple=s_multiple,
+                sharding=sharding, update_fn=update_fn, mesh_desc=mesh_desc,
             )
             for w in range(n_workers)
         ]
@@ -744,7 +814,8 @@ class Cluster:
             tw = obs.clock()
             shadows[w.wid] = w.prepare_patch(eids_w, plan.w_next)
             obs.span_at("prepare_patch", tw, obs.clock() - tw,
-                        worker=w.wid, edges=int(eids_w.shape[0]))
+                        worker=w.wid, edges=int(eids_w.shape[0]),
+                        mesh=self._mesh_desc)
         prepare_s = obs.clock() - t0
         obs.span_at("epoch_prepare", t0, prepare_s,
                     epoch=self.epoch + 1, edges=int(plan.eids.shape[0]))
@@ -763,7 +834,8 @@ class Cluster:
                 tw = obs.clock()
                 w.commit_patch(shadows.get(w.wid), epoch)
                 obs.span_at("commit_patch", tw, obs.clock() - tw,
-                            worker=w.wid, epoch=epoch)
+                            worker=w.wid, epoch=epoch,
+                            mesh=self._mesh_desc)
             else:
                 w.defer_weights(plan.eids)
         commit_s = obs.clock() - t1

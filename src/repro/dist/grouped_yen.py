@@ -25,6 +25,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine.backend import JnpBackend
 from repro.engine.dense import INF
 from repro.engine.yen_engine import _extract
@@ -34,16 +35,18 @@ _INF = float(INF)
 _DEFAULT_BACKEND = JnpBackend()
 
 
-def _dispatch_round(adj, jobs, solver, s_multiple, backend):
+def _dispatch_round(adj, jobs, solver, s_multiple, backend, gather=None):
     """Pack one round's jobs and ISSUE the grouped solve — non-blocking.
 
     ``jobs``: (row, spur, banned_v, banned_next, cap).  Packing goes
     through the backend layout's ``pack_round`` (fresh donation-safe
     scratch buffers, hot rows split across duplicates, bucket a multiple
     of ``s_multiple`` — the mesh device count when the solver is a
-    shard_map refine fn).  The jax call async-dispatches and returns
-    unforced device arrays: the device works on them while the host
-    moves on (``jax.block_until_ready`` is deliberately deferred to
+    shard_map refine fn).  ``gather`` sources the round's adjacency from
+    a device-resident slab mirror instead of a host copy (see
+    ``SlabLayout.pack_round``).  The jax call async-dispatches and
+    returns unforced device arrays: the device works on them while the
+    host moves on (``jax.block_until_ready`` is deliberately deferred to
     ``_collect_round``).
 
     Returns an opaque pending handle for ``_collect_round``, or None on
@@ -51,9 +54,13 @@ def _dispatch_round(adj, jobs, solver, s_multiple, backend):
     """
     if not jobs:
         return None
-    buffers, slots = backend.layout.pack_round(adj, jobs, s_multiple)
+    t0 = obs.clock()
+    buffers, slots = backend.layout.pack_round(adj, jobs, s_multiple,
+                                               gather=gather)
     solve = solver if solver is not None else backend.solve_grouped
     dist, parent = solve(*(jnp.asarray(b) for b in buffers))
+    obs.span_at("dispatch_round", t0, obs.clock() - t0, jobs=len(jobs),
+                adj_src="device" if gather is not None else "host")
     return dist, parent, slots
 
 
@@ -69,11 +76,11 @@ def _collect_round(pending):
     return [(dist[sr, j], parent[sr, j]) for sr, j in slots]
 
 
-def _solve_round(adj, jobs, solver, s_multiple, backend):
+def _solve_round(adj, jobs, solver, s_multiple, backend, gather=None):
     """One grouped solve, dispatch + collect back to back (the lockstep
     path and tests use this; the pipeline steps the two halves apart)."""
     return _collect_round(
-        _dispatch_round(adj, jobs, solver, s_multiple, backend)
+        _dispatch_round(adj, jobs, solver, s_multiple, backend, gather)
     )
 
 
@@ -150,7 +157,7 @@ class _TaskState:
 
 def grouped_ksp_async(adj, tasks, k: int, *, solver=None,
                       use_cap: bool = True, s_multiple: int = 1,
-                      backend=None):
+                      backend=None, gather=None):
     """Generator form of :func:`grouped_ksp`: one ``yield`` per device
     round, placed AFTER the round's solve has been dispatched and BEFORE
     it is forced to numpy.
@@ -182,7 +189,7 @@ def grouped_ksp_async(adj, tasks, k: int, *, solver=None,
             first_of[key] = len(jobs)
             jobs.append((st.row, st.src, np.zeros(z, bool),
                          np.zeros(z, bool), _INF))
-    pending = _dispatch_round(adj, jobs, solver, s_multiple, backend)
+    pending = _dispatch_round(adj, jobs, solver, s_multiple, backend, gather)
     yield
     round0 = _collect_round(pending)
     for st in states:
@@ -209,7 +216,8 @@ def grouped_ksp_async(adj, tasks, k: int, *, solver=None,
             jobs.extend(j)
             metas.append(m)
             owners.append(st)
-        pending = _dispatch_round(adj, jobs, solver, s_multiple, backend)
+        pending = _dispatch_round(adj, jobs, solver, s_multiple, backend,
+                                  gather)
         yield
         results = _collect_round(pending)
         off = 0
@@ -221,7 +229,7 @@ def grouped_ksp_async(adj, tasks, k: int, *, solver=None,
 
 
 def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
-                s_multiple: int = 1, backend=None):
+                s_multiple: int = 1, backend=None, gather=None):
     """K shortest simple paths for a batch of same-slab tasks.
 
     adj     : float32[S, z, z] packed slab (INF off-edges, 0 diagonal)
@@ -232,6 +240,8 @@ def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
               override — e.g. a ``repro.dist.shard_refine.
               make_refine_fn`` product; the backend still supplies
               geometry.
+    gather  : optional device-resident adjacency gather (see
+              ``SlabLayout.pack_round``).
     Returns one [(dist, path-tuple)] list per task, ascending.
 
     A zero-task batch returns [] — the batched dispatch path produces one
@@ -240,7 +250,8 @@ def grouped_ksp(adj, tasks, k: int, *, solver=None, use_cap: bool = True,
     schedules).
     """
     gen = grouped_ksp_async(adj, tasks, k, solver=solver, use_cap=use_cap,
-                            s_multiple=s_multiple, backend=backend)
+                            s_multiple=s_multiple, backend=backend,
+                            gather=gather)
     while True:
         try:
             next(gen)

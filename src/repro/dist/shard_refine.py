@@ -4,7 +4,17 @@ Three factories, each returning a jitted function whose per-shard body
 runs on the local block of the owner-aligned [S, ...] slab layout:
 
 * ``make_refine_fn``    — grouped masked BF refine (solve + parents),
-  subgraph rows sharded across the mesh, zero cross-device traffic;
+  subgraph rows sharded across the mesh.  The per-iteration relaxation
+  is communication-free (problems are co-located with their subgraph's
+  slab row), but the FIXED POINT is global: the convergence flag is a
+  psum-any across shards, so every shard keeps stepping until the whole
+  batch has converged.  Extra steps on an already-converged shard are
+  bitwise no-ops (BF relaxation is idempotent at its fixed point), so
+  the mesh solve is byte-identical to the single-device backends.
+  The relaxation body comes from a
+  :class:`repro.engine.backend.SolverBackend` (``mesh_relax``) — both
+  the jnp ``bf_step_grouped`` path and the Pallas ``bf_relax`` kernel
+  run under the same shard_map wrapper;
 * ``make_update_fn``    — scatter of edge-weight updates into the
   sharded [S, z, z] adjacency slabs (padding rows marked -1 ignored);
 * ``make_allreduce_fn`` — int8-quantized compressed all-reduce with an
@@ -26,7 +36,7 @@ try:  # jax ≥ 0.6 promoted shard_map out of experimental
 except ImportError:
     from jax.experimental.shard_map import shard_map
 
-from repro.engine.dense import bf_parents_grouped, bf_solve_grouped
+from repro.engine.dense import INF, bf_parents_grouped
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):
@@ -57,19 +67,50 @@ def _linear_index(axis):
     return idx
 
 
-def make_refine_fn(mesh, axis=("data", "model"), max_iters: int | None = None):
+def make_refine_fn(mesh, axis=("data", "model"), max_iters: int | None = None,
+                   backend=None):
     """(adj [S,z,z], dist0 [S,J,z], bv, so, bn [S,J,z], cap [S,J]) →
     (dist [S,J,z], parent [S,J,z]) with S sharded over ``axis``.
 
-    The per-shard body is the grouped masked BF — purely local, no
-    collectives: problems were grouped next to their subgraph's slab row
-    by the host dispatch, so the refine step is communication-free.
+    ``backend`` supplies the per-iteration relaxation body via
+    ``SolverBackend.mesh_relax`` (default: the jnp reference backend) —
+    this is how BOTH ``dense_bf`` and ``pallas_bf`` get a mesh path from
+    one wrapper.  Each relaxation step is purely local (problems were
+    grouped next to their subgraph's slab row by the host dispatch);
+    the only collective is the per-iteration psum-any on the
+    convergence flag, which keeps every shard in the while_loop until
+    the GLOBAL fixed point is reached.  Shards that converged early
+    relax idempotently, so the result is byte-identical to the
+    single-device ``solve_grouped`` of the same backend.
     """
+    if backend is None:
+        from repro.engine.backend import JnpBackend
+
+        backend = JnpBackend()
+    prep, step = backend.mesh_relax()
     spec = P(axis)
 
     def local(adj, dist0, bv, so, bn, cap):
-        dist, _ = bf_solve_grouped(
-            adj, dist0, bv, so, bn, cap=cap, max_iters=max_iters
+        z = dist0.shape[-1]
+        iters = z if max_iters is None else max_iters
+        so_p, bn_p = prep(so, bn)
+        dist0 = jnp.where(bv, INF, dist0)
+
+        def cond(state):
+            _, changed, it = state
+            return changed & (it < iters)
+
+        def body(state):
+            dist, _, it = state
+            new = step(dist, adj, bv, so_p, bn_p, cap)
+            # psum-any: converged shards keep relaxing (idempotent)
+            # until the slowest shard's problems reach the fixed point
+            changed = jax.lax.psum(
+                jnp.any(new < dist).astype(jnp.int32), axis) > 0
+            return new, changed, it + 1
+
+        dist, _, _ = jax.lax.while_loop(
+            cond, body, (dist0, jnp.bool_(True), jnp.int32(0))
         )
         parent = bf_parents_grouped(adj, dist, so, bn)
         return dist, parent

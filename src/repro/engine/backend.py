@@ -75,6 +75,25 @@ class SolverBackend:
         """
         raise NotImplementedError
 
+    def mesh_relax(self):
+        """``(prep, step)``: the building blocks a ``shard_map`` mesh
+        fixed point (``repro.dist.shard_refine.make_refine_fn``) iterates
+        per shard.
+
+        ``prep(spur_onehot, banned_next)`` converts the bool masks once,
+        outside the while_loop (the Pallas kernel wants f32 masks; the
+        jnp path passes them through).  ``step(dist, adj, banned_v,
+        so_p, bn_p, cap)`` is ONE full while-body iteration — the
+        relaxation, the banned-vertex re-mask, and the cap clamp — in
+        exactly the op order this backend's single-device
+        ``solve_grouped`` uses.  BF relaxation is idempotent at its
+        fixed point, so a mesh loop that runs extra iterations on an
+        already-converged shard (while a psum-any says some OTHER shard
+        still changes) lands on the same bytes as the single-device
+        solve.
+        """
+        raise NotImplementedError
+
     def __repr__(self):  # pragma: no cover - debugging nicety
         return f"{type(self).__name__}(layout={self.layout.name!r})"
 
@@ -103,6 +122,21 @@ class JnpBackend(SolverBackend):
         obs.span_at("solve_grouped", t0, obs.clock() - t0,
                     backend=self.name, S=S, J=J, z=z)
         return out
+
+    def mesh_relax(self):
+        from .dense import INF, bf_step_grouped
+
+        def prep(so, bn):
+            return so, bn
+
+        def step(dist, adj, bv, so, bn, cap):
+            # mirrors bf_solve_grouped's body: relax → banned-vertex
+            # re-mask → cap clamp, in that order
+            new = bf_step_grouped(dist, adj, so, bn)
+            new = jnp.where(bv, INF, new)
+            return jnp.where(new > cap[:, :, None], INF, new)
+
+        return prep, step
 
 
 @functools.lru_cache(maxsize=None)
@@ -184,3 +218,21 @@ class PallasBackend(SolverBackend):
                     backend=self.name, S=S, J=J, z=z,
                     interpret=self._interpret)
         return out
+
+    def mesh_relax(self):
+        from repro.kernels.bf_relax import bf_relax
+
+        from .dense import INF
+
+        interpret = self._interpret
+
+        def prep(so, bn):
+            return so.astype(jnp.float32), bn.astype(jnp.float32)
+
+        def step(dist, adj, bv, so_f, bn_f, cap):
+            # mirrors _pallas_grouped_solver's body: bf_relax applies the
+            # spur cut and cap clamp in-kernel, then the bv re-mask
+            new = bf_relax(dist, adj, so_f, bn_f, cap, interpret=interpret)
+            return jnp.where(bv, INF, new)
+
+        return prep, step

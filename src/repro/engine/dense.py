@@ -31,13 +31,25 @@ INF = jnp.float32(3.0e38)  # finite "infinity": keeps min-plus NaN-free
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class SubgraphSlab:
-    """Padded dense subgraph batch + bookkeeping (host side)."""
+    """Padded dense subgraph batch + bookkeeping (host side).
+
+    ``adj_dev`` is an optional DEVICE-RESIDENT mirror of ``adj``
+    (:func:`place_slab` creates it, possibly sharded over a mesh via
+    ``sharding``): the per-round dispatch gathers adjacency rows from it
+    on device (:func:`gather_slab_rows`) instead of re-copying the slab
+    host→device every grouped solve.  Patches keep it in sync
+    FUNCTIONALLY — each update produces a new array, never mutates the
+    old — so a streaming epoch swap stays a pure pointer swap and
+    in-flight queries keep reading the previous epoch's buffer.
+    """
 
     adj: np.ndarray        # float32[S, z, z] min-plus adjacency (INF padded)
     nv: np.ndarray         # int32[S] true vertex counts
     gids: np.ndarray       # int64[S] original subgraph ids
     z: int
     epoch: int = 0         # graph epoch the adj entries were packed/patched at
+    adj_dev: object = None  # device mirror [S_dev, z, z] (jax; S_dev ≥ S)
+    sharding: object = None  # NamedSharding of adj_dev (None = default device)
 
     @property
     def n_sub(self) -> int:
@@ -86,6 +98,63 @@ def pack_subgraphs(
         adj=adj, nv=nv, gids=np.array([sg.gid for sg in subs]), z=z,
         epoch=int(epoch),
     )
+
+
+def place_slab(slab: SubgraphSlab, sharding=None,
+               s_multiple: int = 1) -> SubgraphSlab:
+    """Stage a slab's adjacency on device ONCE (the device-resident
+    mirror ``pack_round`` gathers from every round thereafter).
+
+    ``sharding`` (a ``jax.sharding.NamedSharding`` over the S axis)
+    places the mirror across a mesh; S is padded up to a multiple of
+    ``s_multiple`` (the mesh device count) with duplicates of row 0 so
+    the sharded dimension divides evenly — filler rows are never
+    gathered and never patched.  Updates the slab in place and returns
+    it.
+    """
+    S = slab.adj.shape[0]
+    s_multiple = max(1, int(s_multiple))
+    S_dev = -(-S // s_multiple) * s_multiple
+    buf = slab.adj
+    if S_dev != S:
+        buf = np.concatenate(
+            [slab.adj, np.repeat(slab.adj[:1], S_dev - S, axis=0)], axis=0
+        )
+    slab.adj_dev = jax.device_put(buf, sharding)
+    slab.sharding = sharding
+    return slab
+
+
+@jax.jit
+def _gather_rows(adj_dev, rows):
+    return jnp.take(adj_dev, rows, axis=0)
+
+
+def gather_slab_rows(slab: SubgraphSlab, rows):
+    """On-device [len(rows), z, z] adjacency gather from the resident
+    mirror — the zero-transfer replacement for the host row copy in
+    ``SlabLayout.pack_round``."""
+    return _gather_rows(slab.adj_dev, jnp.asarray(rows, jnp.int32))
+
+
+@jax.jit
+def _scatter_rows(adj_dev, rows, uu, vv, ww):
+    # -1-padded entries map to S (out of bounds) and drop — the same
+    # contract shard_refine.make_update_fn implements per shard
+    r = jnp.where(rows >= 0, rows, adj_dev.shape[0])
+    return adj_dev.at[r, uu, vv].set(ww, mode="drop")
+
+
+def scatter_slab_cells(adj_dev, rows, uu, vv, ww, update_fn=None):
+    """Functionally patch cells of a device mirror: ``rows`` -1-padded
+    int32, ``ww`` the EFFECTIVE (min-over-parallel-edges) new weights.
+    ``update_fn`` (a ``shard_refine.make_update_fn`` product) routes the
+    scatter through the mesh path; default is the single-device form."""
+    args = (jnp.asarray(rows, jnp.int32), jnp.asarray(uu, jnp.int32),
+            jnp.asarray(vv, jnp.int32), jnp.asarray(ww, jnp.float32))
+    if update_fn is not None:
+        return update_fn(adj_dev, *args)
+    return _scatter_rows(adj_dev, *args)
 
 
 # ---------------------------------------------------------------------------

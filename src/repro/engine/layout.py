@@ -35,11 +35,23 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["SlabLayout", "JNP_LAYOUT", "PALLAS_LAYOUT"]
+__all__ = ["SlabLayout", "JNP_LAYOUT", "PALLAS_LAYOUT", "TRANSFER_STATS",
+           "reset_transfer_stats"]
 
 # matches engine.dense.INF (finite "infinity" keeps min-plus NaN-free)
 # without importing jax here — layout is pure-host geometry
 _INF = float(3.0e38)
+
+# adjacency-staging counters: how many rounds copied slab rows on the
+# host (→ a host→device transfer per dispatch) vs gathered them from a
+# device-resident mirror.  The device-residency acceptance test asserts
+# host_rounds stays 0 on the steady-state query path.
+TRANSFER_STATS = {"host_rounds": 0, "device_rounds": 0}
+
+
+def reset_transfer_stats():
+    TRANSFER_STATS["host_rounds"] = 0
+    TRANSFER_STATS["device_rounds"] = 0
 
 
 def _pow2(n: int) -> int:
@@ -119,7 +131,7 @@ class SlabLayout:
         _, s_pad, j_pad = best
         return s_pad, j_pad
 
-    def pack_round(self, adj, jobs, s_multiple: int = 1):
+    def pack_round(self, adj, jobs, s_multiple: int = 1, gather=None):
         """Pack one grouped-solve round's jobs into fresh device buffers.
 
         ``jobs``: [(slab_row, spur, banned_v bool[z], banned_next bool[z],
@@ -128,13 +140,21 @@ class SlabLayout:
         bucket shape comes from :meth:`bucket_shape` (hot rows split
         across duplicate slab rows).
 
+        ``gather`` (optional ``rows int32[S_pad] -> adj[S_pad, z, z]``)
+        sources the round's adjacency from a DEVICE-RESIDENT slab mirror
+        (``engine.dense.gather_slab_rows``) instead of copying rows on
+        the host: the steady-state query path then transfers only the
+        small init/mask buffers per dispatch, never the [S, z, z] slab.
+        Layout stays jax-free — the callable owns all device specifics.
+
         Every returned array is a FRESH scratch buffer — adjacency rows
-        are copied out of the persistent slab, never aliased — so a
-        backend may hand them to a solver jitted with
-        ``donate_argnums`` (the donated device buffers are consumed by
-        the solve) without ever invalidating the worker's slab or a
+        are copied (or device-gathered) out of the persistent slab,
+        never aliased — so a backend may hand them to a solver jitted
+        with ``donate_argnums`` (the donated device buffers are consumed
+        by the solve) without ever invalidating the worker's slab or a
         caller-held mask.  This is the donation-safety contract the
         async pipeline relies on: round buffers die with the round.
+        (The adjacency argument itself is never donated.)
         """
         z = adj.shape[-1]
         counts: dict = {}
@@ -155,9 +175,16 @@ class SlabLayout:
             cursor[row] = cur
         S_ = len(slab_rows)
 
-        adj_used = np.empty((S_pad, z, z), np.float32)
-        adj_used[:S_] = adj[slab_rows]
-        adj_used[S_:] = adj[slab_rows[0]]  # filler rows; problems stay all-INF
+        if gather is not None:
+            # filler rows duplicate row 0; their problems stay all-INF
+            rows = slab_rows + [slab_rows[0]] * (S_pad - S_)
+            adj_used = gather(np.asarray(rows, np.int32))
+            TRANSFER_STATS["device_rounds"] += 1
+        else:
+            adj_used = np.empty((S_pad, z, z), np.float32)
+            adj_used[:S_] = adj[slab_rows]
+            adj_used[S_:] = adj[slab_rows[0]]  # filler; problems stay all-INF
+            TRANSFER_STATS["host_rounds"] += 1
         init = np.full((S_pad, J_pad, z), _INF, np.float32)
         bv = np.zeros((S_pad, J_pad, z), bool)
         so = np.zeros((S_pad, J_pad, z), bool)

@@ -159,6 +159,7 @@ def _grouped_refine_async(worker, misses, k, epoch):
     ``worker.slab`` already holds the next epoch's weights and this
     batch's epoch lives in ``worker.prev_slab``."""
     from repro.dist.grouped_yen import grouped_ksp_async
+    from repro.engine.dense import gather_slab_rows
 
     dtlp = worker.dtlp
     slab = worker.slab_for(epoch)
@@ -167,10 +168,16 @@ def _grouped_refine_async(worker, misses, k, epoch):
         sg = dtlp.partition.subgraphs[gid]
         gk_tasks.append((worker.row_of[gid], sg.g2l[a], sg.g2l[b]))
     worker.stats.batches += 1
+    # device-resident slab: per-round adjacency comes from an on-device
+    # row gather against the persistent mirror instead of a host re-pack
+    # + transfer (the steady-state query path never re-stages the slab)
+    gather = None
+    if slab.adj_dev is not None:
+        gather = lambda rows: gather_slab_rows(slab, rows)  # noqa: E731
     results = yield from grouped_ksp_async(
         slab.adj, gk_tasks, k,
         solver=worker.solver, s_multiple=worker.s_multiple,
-        backend=worker.spec.backend,
+        backend=worker.spec.backend, gather=gather,
     )
     out = {}
     for (gid, a, b), local in zip(misses, results):
@@ -194,16 +201,39 @@ def _grouped_refine(worker, misses, k, epoch):
             return fin.value
 
 
-def _dense_bf_mesh_solver(mesh, mesh_axis):
-    """shard_map grouped-BF product over a device mesh."""
-    import numpy as np
+def mesh_axis_names(mesh_axis) -> list:
+    return [mesh_axis] if isinstance(mesh_axis, str) else list(mesh_axis)
 
-    from repro.dist.shard_refine import make_refine_fn
 
-    solver = make_refine_fn(mesh, axis=mesh_axis)
-    names = ([mesh_axis] if isinstance(mesh_axis, str) else list(mesh_axis))
-    s_multiple = int(np.prod([mesh.shape[a] for a in names]))
-    return solver, s_multiple
+def _grouped_mesh_solver(backend):
+    """``make_mesh_solver`` for any slab backend: the shard_map grouped-BF
+    fixed point over a device mesh, with this backend's relaxation body
+    (``mesh_relax``) inside the loop."""
+
+    def make(mesh, mesh_axis):
+        import numpy as np
+
+        from repro import obs
+        from repro.dist.shard_refine import make_refine_fn
+
+        refine = make_refine_fn(mesh, axis=mesh_axis, backend=backend)
+        names = mesh_axis_names(mesh_axis)
+        s_multiple = int(np.prod([mesh.shape[a] for a in names]))
+        desc = "x".join(str(int(mesh.shape[a])) for a in names)
+
+        def solver(adj, init, bv, so, bn, cap):
+            # same async-dispatch contract (and span) as
+            # backend.solve_grouped, plus the mesh= shard-dispatch attr
+            S, J, z = init.shape
+            t0 = obs.clock()
+            out = refine(adj, init, bv, so, bn, cap)
+            obs.span_at("solve_grouped", t0, obs.clock() - t0,
+                        backend=backend.name, S=S, J=J, z=z, mesh=desc)
+            return out
+
+        return solver, s_multiple
+
+    return make
 
 
 register_engine(EngineSpec(
@@ -215,25 +245,28 @@ register_engine(EngineSpec(
 
 # JnpBackend layout packs at lane=8: the jnp grouped solvers want a
 # tight z (relaxation compute is O(z²)/problem)
+_JNP_BACKEND = JnpBackend()
 register_engine(EngineSpec(
     name="dense_bf",
     refine=_grouped_refine,
     refine_async=_grouped_refine_async,
     packs_slab=True,
-    backend=JnpBackend(),
-    make_mesh_solver=_dense_bf_mesh_solver,
+    backend=_JNP_BACKEND,
+    make_mesh_solver=_grouped_mesh_solver(_JNP_BACKEND),
     description="grouped [S, J, z] dense Bellman–Ford over per-worker slabs",
 ))
 
 # PallasBackend layout packs at lane=128 with sublane-aligned,
 # VMEM-bounded J buckets; on non-TPU hosts the kernel runs interpret=True
 # and produces byte-identical paths to dense_bf
+_PALLAS_BACKEND = PallasBackend()
 register_engine(EngineSpec(
     name="pallas_bf",
     refine=_grouped_refine,
     refine_async=_grouped_refine_async,
     packs_slab=True,
-    backend=PallasBackend(),
+    backend=_PALLAS_BACKEND,
+    make_mesh_solver=_grouped_mesh_solver(_PALLAS_BACKEND),
     description="fused Pallas bf_relax fixed point over 128-lane slabs "
                 "(interpret-mode fallback off-TPU)",
 ))

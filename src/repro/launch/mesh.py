@@ -1,9 +1,11 @@
-"""Production mesh builders.
+"""Production mesh builders and the ``jax.distributed`` init hook.
 
-A FUNCTION, not a module-level constant: importing this module never
+FUNCTIONS, not module-level constants: importing this module never
 touches jax device state."""
 
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -17,3 +19,58 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(n_devices: int | None = None, axes=("data", "model")):
+    """A (n, 1) mesh over the first ``n_devices`` local devices.
+
+    The scale-out bench and the mesh test legs use this with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to exercise
+    real shard_map execution on a single host; on a TPU/GPU host the
+    same call spans the actual accelerators.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"n_devices={n} out of range (host has {len(devs)} devices)"
+        )
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(n, 1), tuple(axes))
+
+
+def init_distributed(coordinator_address: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None) -> bool:
+    """Initialize ``jax.distributed`` for multi-host serving.
+
+    Explicit arguments win; otherwise the coordinator comes from the
+    environment — ``REPRO_COORDINATOR`` (ours) or
+    ``JAX_COORDINATOR_ADDRESS`` (jax's own), with process counts from
+    ``REPRO_NUM_PROCESSES``/``REPRO_PROCESS_ID``.  On managed platforms
+    (TPU pods, SLURM) ``jax.distributed.initialize()`` auto-detects, so
+    a bare ``--distributed`` with no env also works there.
+
+    Returns True when initialization ran, False when no coordinator was
+    configured (single-process mode: the caller proceeds with local
+    devices only — the same code path, a 1-host mesh).
+    """
+    coord = coordinator_address or os.environ.get(
+        "REPRO_COORDINATOR") or os.environ.get("JAX_COORDINATOR_ADDRESS")
+    auto = os.environ.get("REPRO_DISTRIBUTED_AUTO", "")
+    if coord is None and not auto:
+        return False
+    kw = {}
+    if coord is not None:
+        kw["coordinator_address"] = coord
+        nproc = (num_processes if num_processes is not None
+                 else os.environ.get("REPRO_NUM_PROCESSES"))
+        pid = (process_id if process_id is not None
+               else os.environ.get("REPRO_PROCESS_ID"))
+        if nproc is not None:
+            kw["num_processes"] = int(nproc)
+        if pid is not None:
+            kw["process_id"] = int(pid)
+    jax.distributed.initialize(**kw)
+    return True

@@ -61,8 +61,17 @@ def main():
     )
     ap.add_argument(
         "--mesh", action="store_true",
-        help="route the dense refine through jax.shard_map over the device "
-        "mesh (implies --engine dense_bf)",
+        help="route the grouped refine through jax.shard_map over the "
+        "device mesh with device-resident sharded slabs (works with any "
+        "mesh-capable engine: dense_bf, pallas_bf)",
+    )
+    ap.add_argument(
+        "--distributed", action="store_true",
+        help="initialize jax.distributed before building the mesh "
+        "(multi-host serving: coordinator from REPRO_COORDINATOR / "
+        "JAX_COORDINATOR_ADDRESS + REPRO_NUM_PROCESSES/REPRO_PROCESS_ID, "
+        "or platform auto-detection); single-process multi-device needs "
+        "only XLA_FLAGS=--xla_force_host_platform_device_count=N",
     )
     ap.add_argument(
         "--concurrency", type=int, default=8,
@@ -123,12 +132,36 @@ def main():
 
     mesh = None
     engine = args.engine
+    if args.distributed:
+        from repro.launch.mesh import init_distributed
+
+        if init_distributed():
+            import jax
+
+            print(f"jax.distributed initialized: process "
+                  f"{jax.process_index()}/{jax.process_count()}, "
+                  f"{jax.device_count()} global devices")
+        else:
+            print("--distributed: no coordinator configured; "
+                  "continuing single-process with local devices")
     if args.mesh:
         import jax
 
-        engine = "dense_bf"  # shard_map refine is a dense-engine path
-        mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
-        print(f"shard_map refine over a {jax.device_count()}x1 device mesh")
+        from repro.service import get_engine
+
+        spec = get_engine(engine)
+        if not spec.supports_mesh:
+            meshable = [e for e in available_engines()
+                        if get_engine(e).supports_mesh]
+            ap.error(
+                f"--mesh: engine {engine!r} has no device-mesh path; "
+                f"mesh-capable engines: {', '.join(meshable)}"
+            )
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+        print(f"shard_map refine over a {jax.device_count()}x1 device mesh "
+              f"({engine}, device-resident sharded slabs)")
 
     cfg = ServiceConfig(
         engine=engine,

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from tests._hypothesis_compat import given, settings, st
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.dtlp import DTLP
@@ -217,3 +218,131 @@ class TestPallasEngineEndToEnd:
         got = self._scenario("pallas_bf")
         assert got == want
         assert [e for _, e in got] == [0, 0, 1, 1]  # barrier ordering
+
+
+class TestDeviceResidentSlabs:
+    """Acceptance: per-worker slabs stay on device across scheduler
+    ticks — the steady-state query path gathers adjacency rows from the
+    resident mirror instead of re-transferring the slab per dispatch."""
+
+    def test_steady_state_rounds_never_stage_from_host(self):
+        from repro.engine.layout import TRANSFER_STATS, reset_transfer_stats
+
+        g = grid_road_network(6, 6, seed=0)
+        d = DTLP.build(g, z=12, xi=4)
+        svc = KSPService(d, ServiceConfig(engine="dense_bf", n_workers=2,
+                                          max_in_flight=4))
+        for w in svc.cluster.workers:
+            if w.slab is not None:
+                assert w.slab.adj_dev is not None  # placed once, at init
+        rng = np.random.default_rng(11)
+        reset_transfer_stats()
+        for _ in range(3):
+            s, t = map(int, rng.choice(g.n, 2, replace=False))
+            svc.query(s, t, 3)
+        assert TRANSFER_STATS["device_rounds"] > 0
+        assert TRANSFER_STATS["host_rounds"] == 0
+
+    def test_mirror_tracks_patches(self):
+        """Barrier and streaming patches keep the device mirror bitwise
+        in sync with the host slab (the mirror is patched functionally,
+        never re-staged)."""
+        from repro.dist.cluster import Cluster
+
+        g = grid_road_network(6, 6, seed=2)
+        d = DTLP.build(g, z=12, xi=4)
+        cl = Cluster(d, n_workers=2, engine="dense_bf")
+        stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=3)
+        cl.apply_updates(*stream.next_batch())
+        cl.apply_updates_streaming(*stream.next_batch())
+        for w in cl.workers:
+            if w.slab is None:
+                continue
+            S = w.slab.adj.shape[0]
+            np.testing.assert_array_equal(
+                np.asarray(w.slab.adj_dev)[:S], w.slab.adj
+            )
+            # the double buffer's mirror stayed at the previous epoch
+            S0 = w.prev_slab.adj.shape[0]
+            np.testing.assert_array_equal(
+                np.asarray(w.prev_slab.adj_dev)[:S0], w.prev_slab.adj
+            )
+
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs ≥2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=N)",
+)
+
+
+@needs_devices
+class TestMeshParityLadder:
+    """The tentpole's parity ladder on a real (2,1) device mesh: solve →
+    grouped-Yen → end-to-end KSPService, each leg byte-identical to the
+    single-device reference, for BOTH slab backends."""
+
+    @pytest.fixture(scope="class")
+    def mesh(self):
+        return jax.sharding.Mesh(
+            np.array(jax.devices()[:2]).reshape(2, 1), ("data", "model")
+        )
+
+    @pytest.mark.parametrize("backend", [JnpBackend(),
+                                         PallasBackend(interpret=True)],
+                             ids=["jnp", "pallas"])
+    def test_solve_level(self, mesh, backend):
+        from repro.dist.shard_refine import make_refine_fn
+
+        rng = np.random.default_rng(5)
+        args = [jnp.asarray(x) for x in masked_slab(rng, 4, 3, 24)]
+        d_ref, p_ref = backend.solve_grouped(*args)
+        d_m, p_m = make_refine_fn(mesh, backend=backend)(*args)
+        np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d_m))
+        np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_m))
+
+    @pytest.mark.parametrize("engine", ["dense_bf", "pallas_bf"])
+    def test_grouped_yen_level(self, mesh, engine):
+        from repro.dist.grouped_yen import grouped_ksp
+
+        spec = get_engine(engine)
+        g = grid_road_network(6, 6, seed=1)
+        d = DTLP.build(g, z=12, xi=4)
+        slab = pack_subgraphs(d.partition, g.w, layout=spec.layout)
+        tasks = []
+        for row in range(min(2, slab.n_sub)):
+            sg = d.partition.subgraphs[int(slab.gids[row])]
+            tasks.append((row, 0, sg.nv - 1))
+        want = grouped_ksp(slab.adj, tasks, 3, backend=spec.backend)
+        solver, s_multiple = spec.make_mesh_solver(mesh, ("data", "model"))
+        got = grouped_ksp(slab.adj, tasks, 3, solver=solver,
+                          s_multiple=s_multiple, backend=spec.backend)
+        assert got == want
+
+    @pytest.mark.parametrize("engine", ["dense_bf", "pallas_bf"])
+    def test_service_level(self, mesh, engine):
+        def scenario(mesh_arg):
+            g = grid_road_network(6, 6, seed=0)
+            d = DTLP.build(g, z=12, xi=4)
+            svc = KSPService(d, ServiceConfig(
+                engine=engine, n_workers=2, max_in_flight=4,
+                mesh=mesh_arg,
+            ))
+            rng = np.random.default_rng(7)
+            qs = [tuple(map(int, rng.choice(g.n, 2, replace=False)))
+                  for _ in range(4)]
+            stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=5)
+            out = []
+            for s, t in qs[:2]:
+                r = svc.query(s, t, 3)
+                out.append((r.paths, r.epoch))
+            svc.update(UpdateBatch(*stream.next_batch()))
+            for s, t in qs[2:]:
+                r = svc.query(s, t, 3)
+                out.append((r.paths, r.epoch))
+            return out
+
+        want = scenario(None)
+        got = scenario(mesh)
+        assert got == want
+        assert [e for _, e in got] == [0, 0, 1, 1]

@@ -29,14 +29,15 @@ def same_paths(a, b, rtol=1e-9):
     )
 
 
-def run_mixed(update_mode, pipeline, n_queries=12, n_updates=3):
+def run_mixed(update_mode, pipeline, n_queries=12, n_updates=3,
+              engine="dense_bf", mesh=None):
     """One fixed interleaved trace: queries stream in, update batches
     land mid-flight (``wait=False``), completions collected from EVERY
     tick (not just the final drain)."""
     g = grid_road_network(8, 8, seed=0)
     cfg = ServiceConfig(
-        engine="dense_bf", n_workers=4, rebaseline_drift=0.0,
-        update_mode=update_mode, pipeline=pipeline,
+        engine=engine, n_workers=4, rebaseline_drift=0.0,
+        update_mode=update_mode, pipeline=pipeline, mesh=mesh,
     )
     svc = KSPService.build(g, cfg)
     stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=7)
@@ -221,6 +222,72 @@ class TestWorkerDoubleBuffer:
         dead.ensure_epoch()  # lazy resync replays the missed batch
         assert dead.epoch == 1 and not dead.pending
         assert dead.stats.resyncs == 1
+
+
+def _mesh2():
+    import jax
+
+    if jax.device_count() < 2:
+        pytest.skip("needs ≥2 devices (XLA_FLAGS=--xla_force_host_"
+                    "platform_device_count=N)")
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:2]).reshape(2, 1), ("data", "model")
+    )
+
+
+class TestStreamingUnderMesh:
+    """Updates-under-mesh: the streaming prepare/commit epoch swap and
+    the kill/revive resync must stay byte-identical to the in-process
+    (no-mesh) path when slabs are device-resident and sharded over a
+    (2,1) mesh.  Skips without forced host devices (the CI mesh leg)."""
+
+    def test_streaming_trace_matches_in_process(self):
+        mesh = _mesh2()
+        svc_ref, res_ref = run_mixed("streaming", pipeline=True)
+        svc_m, res_m = run_mixed("streaming", pipeline=True, mesh=mesh)
+        assert svc_ref.epoch == svc_m.epoch == 3
+        assert set(res_ref) == set(res_m)
+        for qid in res_ref:
+            ra, rb = res_ref[qid].result, res_m[qid].result
+            assert (ra.paths, ra.epoch) == (rb.paths, rb.epoch), qid
+
+    @pytest.mark.parametrize("engine", ["dense_bf", "pallas_bf"])
+    def test_kill_revive_resync_byte_identical(self, engine):
+        mesh = _mesh2()
+
+        def run(mesh_arg):
+            g = grid_road_network(6, 6, seed=5)
+            d = DTLP.build(g, z=12, xi=4)
+            cl = Cluster(d, n_workers=3, engine=engine, mesh=mesh_arg)
+            stream = WeightUpdateStream(g, alpha=0.5, tau=0.5, seed=3)
+            cl.kill(1)
+            dead = cl.workers[1]
+            cl.apply_updates_streaming(*stream.next_batch())  # missed
+            assert dead.epoch == 0 and len(dead.pending) == 1
+            cl.revive(1)
+            dead.ensure_epoch()  # lazy resync replays the missed batch
+            assert dead.epoch == 1 and dead.stats.resyncs == 1
+            rng = np.random.default_rng(9)
+            out = []
+            for _ in range(3):
+                s, t = map(int, rng.choice(g.n, 2, replace=False))
+                out.append(cl.query(s, t, 3))
+            slabs = [np.asarray(w.slab.adj).copy() for w in cl.workers
+                     if w.slab is not None]
+            mirrors = [
+                np.asarray(w.slab.adj_dev)[: w.slab.adj.shape[0]].copy()
+                for w in cl.workers if w.slab is not None
+            ]
+            return out, slabs, mirrors
+
+        want_out, want_slabs, _ = run(None)
+        got_out, got_slabs, got_mirrors = run(mesh)
+        assert got_out == want_out
+        for a, b in zip(want_slabs, got_slabs):
+            np.testing.assert_array_equal(a, b)
+        # the sharded mirrors resynced too (host slab == device mirror)
+        for host, dev in zip(got_slabs, got_mirrors):
+            np.testing.assert_array_equal(host, dev)
 
 
 class TestPredictedWaitFoldsUpdates:
