@@ -1,0 +1,221 @@
+"""Query-variant workloads on the shared serving stack: plain / diverse
+/ bounded / one-to-many traffic through the SAME scheduler and grouped
+solves (fig="workloads" rows), plus a mixed-variant burst that proves
+the sharing (fig="workloads_mixed").
+
+Every variant rides the unchanged KSP-DG filter loop — a
+``repro.core.variants.VariantPolicy`` only deepens the candidate pool,
+moves the stop bound, and picks the answer, so refine tasks from a
+diverse query and a plain query over the same boundary pairs
+de-duplicate into one grouped solve.  The per-variant legs report what
+each workload costs on its own (qps, p50/p95 latency, svc_* columns);
+the mixed leg replays an interleaved trace of all four kinds and
+records the cross-variant dedup counters directly.
+
+``--smoke`` doubles as the CI gate: it FAILS (exit 1) when
+
+* any replay leaves a query unserved,
+* a diverse answer violates its own ``min_dist`` contract or a bounded
+  answer exceeds its stretch window (answer-shape regressions surface
+  here even when the oracle tests are skipped),
+* the mixed-variant burst de-duplicates zero tasks — the whole point of
+  routing variants through one scheduler is shared solves; zero dedup
+  means someone forked the path.
+
+    PYTHONPATH=src python -m benchmarks.bench_workloads --smoke
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dtlp import DTLP
+from repro.core.variants import path_edges, path_overlap
+from repro.service import (
+    BoundedKSPRequest,
+    DiverseKSPRequest,
+    KSPService,
+    OneToManyRequest,
+    QueryRequest,
+    ServiceConfig,
+)
+
+from .common import build_network, emit, rand_queries, service_row
+
+CONCURRENCY = 8
+K = 3
+STRETCH = 1.4
+MIN_DIST = 0.3
+N_TARGETS = 3
+
+
+def _config(engine, workers, concurrency):
+    # straggler auto-detection off: a mid-pass re-route would pollute
+    # the cross-variant comparison
+    return ServiceConfig(engine=engine, n_workers=workers,
+                         max_in_flight=concurrency,
+                         straggler_factor=None)
+
+
+def _targets(g, s, t, rng):
+    """A target set for one_to_many: the pair's own t plus nearby picks."""
+    out = [t]
+    while len(out) < N_TARGETS:
+        c = int(rng.integers(g.n))
+        if c != s and c not in out:
+            out.append(c)
+    return tuple(out)
+
+
+def _requests(variant, g, qs, seed=5):
+    rng = np.random.default_rng(seed)
+    if variant == "ksp":
+        return [QueryRequest(s, t, K) for s, t in qs]
+    if variant == "diverse":
+        return [DiverseKSPRequest(s, t, k=K, min_dist=MIN_DIST)
+                for s, t in qs]
+    if variant == "bounded":
+        return [BoundedKSPRequest(s, t, k=2 * K, stretch=STRETCH)
+                for s, t in qs]
+    if variant == "one_to_many":
+        return [OneToManyRequest(s, targets=_targets(g, s, t, rng), k=K)
+                for s, t in qs]
+    raise ValueError(variant)
+
+
+def _mixed_requests(g, qs):
+    """All four kinds interleaved over the SAME endpoint pairs — the
+    trace where cross-variant dedup has something to share."""
+    rng = np.random.default_rng(9)
+    reqs = []
+    for i, (s, t) in enumerate(qs):
+        reqs.append(QueryRequest(s, t, K))
+        reqs.append(BoundedKSPRequest(s, t, k=2 * K, stretch=STRETCH))
+        if i % 2 == 0:
+            reqs.append(DiverseKSPRequest(s, t, k=K, min_dist=MIN_DIST))
+        else:
+            reqs.append(
+                OneToManyRequest(s, targets=_targets(g, s, t, rng), k=K))
+    return reqs
+
+
+def _serve(dtlp, engine, workers, reqs, concurrency):
+    """One timed pass on a fresh service (cold caches)."""
+    svc = KSPService(dtlp, _config(engine, workers, concurrency))
+    t0 = time.perf_counter()
+    tickets = svc.replay(reqs)
+    total = time.perf_counter() - t0
+    if not all(tk.result is not None for tk in tickets):
+        raise AssertionError("unbounded replay must serve every query")
+    return svc, tickets, total
+
+
+def _check_contracts(variant, tickets, directed):
+    """Answer-shape gates that hold on ANY graph, oracle-free."""
+    for tk in tickets:
+        res, req = tk.result, tk.request
+        if variant == "diverse":
+            edges = [path_edges(p, directed) for _, p in res.paths]
+            for i in range(len(edges)):
+                for j in range(i + 1, len(edges)):
+                    if path_overlap(edges[i], edges[j]) > 1 - req.min_dist + 1e-9:
+                        raise AssertionError(
+                            f"diverse answer violates min_dist={req.min_dist}")
+        elif variant == "bounded":
+            if res.paths:
+                cut = req.stretch * res.paths[0][0] + 1e-9
+                if any(d > cut for d, _ in res.paths):
+                    raise AssertionError(
+                        f"bounded answer exceeds stretch={req.stretch}")
+        elif variant == "one_to_many":
+            if res.by_target is None or len(res.by_target) != len(req.targets):
+                raise AssertionError("one_to_many must answer every target")
+            for tgt, plist in zip(req.targets, res.by_target):
+                for _, p in plist:
+                    if p[0] != req.s or p[-1] != tgt:
+                        raise AssertionError("one_to_many endpoints wrong")
+
+
+def _row(fig, engine, variant, svc, tickets, total):
+    st = svc.scheduler.stats
+    lat = sorted(tk.result.latency_ms for tk in tickets)
+    return dict(
+        fig=fig, engine=engine, variant=variant,
+        n_queries=len(tickets), concurrency=CONCURRENCY,
+        total_s=round(total, 3),
+        qps=round(len(tickets) / total, 2),
+        p50_ms=round(lat[len(lat) // 2], 1),
+        p95_ms=round(lat[min(len(lat) - 1, int(0.95 * len(lat)))], 1),
+        tasks_requested=st.tasks_requested,
+        tasks_dispatched=st.tasks_dispatched,
+        tasks_deduped=st.tasks_deduped,
+        **service_row(svc),
+    )
+
+
+def bench_workloads(quick=True, engine=None, smoke=False):
+    engines = [engine] if engine else ["pyen", "dense_bf"]
+    if smoke:
+        engines = [engine] if engine else ["dense_bf"]
+        g, z = build_network("NY-s", True)
+        n_q, workers = 8, 2
+    else:
+        g, z = build_network("NY-s" if quick else "COL-s", quick)
+        n_q, workers = (24 if quick else 60), 4
+    d = DTLP.build(g, z=z, xi=4)
+    qs = rand_queries(g, n_q, seed=3)
+    repeat = 2 if smoke else 3
+    rows = []
+    for eng in engines:
+        # ---- per-variant legs ----
+        for variant in ("ksp", "diverse", "bounded", "one_to_many"):
+            reqs = _requests(variant, g, qs)
+            _serve(d, eng, workers, reqs, CONCURRENCY)  # warm jit buckets
+            best = None
+            for _ in range(repeat):
+                run = _serve(d, eng, workers, reqs, CONCURRENCY)
+                if best is None or run[-1] < best[-1]:
+                    best = run
+            svc, tickets, total = best
+            _check_contracts(variant, tickets, g.directed)
+            rows.append(_row("workloads", eng, variant, svc, tickets, total))
+        # ---- mixed-variant burst: the sharing proof ----
+        mreqs = _mixed_requests(g, qs)
+        _serve(d, eng, workers, mreqs, CONCURRENCY)
+        best = None
+        for _ in range(repeat):
+            run = _serve(d, eng, workers, mreqs, CONCURRENCY)
+            if best is None or run[-1] < best[-1]:
+                best = run
+        svc, tickets, total = best
+        rows.append(_row("workloads_mixed", eng, "mixed", svc, tickets, total))
+        if smoke and svc.scheduler.stats.tasks_deduped == 0:
+            raise AssertionError(
+                "mixed-variant burst deduped 0 tasks — variants are not "
+                "sharing grouped solves")
+    emit("workloads", rows)
+    return rows
+
+
+def main(quick=True):
+    bench_workloads(quick=quick)
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + hard gates (CI; exit 1 on failure)")
+    args = ap.parse_args()
+    try:
+        bench_workloads(quick=not args.full, engine=args.engine,
+                        smoke=args.smoke)
+    except AssertionError as e:
+        print(f"SMOKE GATE FAILED: {e}", file=sys.stderr)
+        sys.exit(1)

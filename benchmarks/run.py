@@ -26,6 +26,7 @@ def main() -> None:
         bench_query,
         bench_scaleout,
         bench_update,
+        bench_workloads,
     )
 
     suites = {
@@ -38,6 +39,9 @@ def main() -> None:
         "update": bench_update.main,        # live-update feed: barrier vs
                                             # streaming epoch handoff
         "obs": bench_obs.main,              # tracing/metrics overhead gate
+        "workloads": bench_workloads.main,  # query variants (diverse /
+                                            # bounded / one-to-many) on the
+                                            # shared scheduler
     }
     t0 = time.time()
     for name, fn in suites.items():

@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the repo's docs.
+
+Verifies that every *repo-relative* markdown link target exists on
+disk, resolved against the linking file's directory.  External links
+(http/https/mailto) and pure in-page anchors (#...) are skipped — CI
+must stay offline-safe — but a `path#anchor` target still has its path
+checked.
+
+    python scripts/check_links.py README.md ROADMAP.md docs/*.md
+
+Exits 1 listing every broken link; 0 when all targets resolve.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline links [text](target); images ![alt](target) match too via the
+# same pattern.  Reference-style definitions `[id]: target` are rare
+# here but cheap to cover.
+_INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_SKIP = ("http://", "https://", "mailto:", "ftp://")
+
+
+def links_in(path: str) -> list[str]:
+    text = open(path, encoding="utf-8").read()
+    # fenced code blocks routinely contain `[S, J, z]`-style brackets
+    # that are not links — drop them before matching
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    text = re.sub(r"`[^`]*`", "", text)
+    return _INLINE.findall(text) + _REFDEF.findall(text)
+
+
+def check(files: list[str]) -> list[str]:
+    broken = []
+    for f in files:
+        base = os.path.dirname(os.path.abspath(f))
+        for target in links_in(f):
+            if target.startswith(_SKIP) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (rel if os.path.isabs(rel)
+                        else os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                broken.append(f"{f}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    files = argv or ["README.md"]
+    missing_inputs = [f for f in files if not os.path.exists(f)]
+    if missing_inputs:
+        print("no such file: " + ", ".join(missing_inputs), file=sys.stderr)
+        return 2
+    broken = check(files)
+    for line in broken:
+        print(line, file=sys.stderr)
+    n_files = len(files)
+    if broken:
+        print(f"{len(broken)} broken link(s) across {n_files} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"link check OK: {n_files} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -27,9 +27,13 @@ from repro import obs
 from .dtlp import DTLP
 from .refstream import TIE_EPS, get_ref_stream
 from .sssp import CSRView, dijkstra, subgraph_view
+from .variants import VariantPolicy
 from .yen import ksp
 
 INF = float("inf")
+
+# shared identity policy: plain top-k, allocated once for the hot path
+_PLAIN = VariantPolicy()
 
 
 @dataclasses.dataclass
@@ -48,6 +52,10 @@ class QueryStats:
     # Yen stream enumerates combinatorially many tied-weight reference
     # paths — the "lazy" reference stream exists to remove this mode.
     truncated: bool = False
+    # bounded-variant flag: the stretch window held more paths than the
+    # budget k allowed — the returned top-k is exact, the enumeration of
+    # the window was clipped (see core.variants.BoundedKSP)
+    bound_clipped: bool = False
 
 
 class PartialKSPCache:
@@ -311,6 +319,7 @@ def ksp_dg_stepper(
     max_iterations: int = 10_000,
     ref_stream=None,
     tie_batch: int | None = None,
+    variant=None,
 ):
     """Resumable KSP-DG (Algorithm 1): one generator step per iteration.
 
@@ -334,12 +343,24 @@ def ksp_dg_stepper(
     would have had to consume anyway, and every cohort member's weight
     ties the first member's, so no reference past the stopping weight is
     ever refined "extra".
+
+    ``variant`` is an optional :class:`repro.core.variants.VariantPolicy`
+    bending the same loop to a different workload (diverse / bounded —
+    see :mod:`repro.core.variants`).  The policy widens the candidate
+    pool (``solve_k``), generalizes the Theorem-3 stop bound
+    (``stop_bound``), and maps the enumerated candidates to the answer
+    (``finalize``); ``None`` is the plain top-k query.  Refine depth and
+    :class:`RefineRequest.k` follow ``solve_k``, so the scheduler's
+    cross-query dedup keys stay correct automatically.
     """
+    policy = variant if variant is not None else _PLAIN
+    solve_k = policy.solve_k(k)
+    directed = dtlp.graph.directed
     spec = get_ref_stream(ref_stream)
     batch = spec.tie_batch if tie_batch is None else max(1, int(tie_batch))
     stats = QueryStats()
     if s == t:
-        return [(0.0, (s,))], stats
+        return policy.finalize([(0.0, (s,))], k, stats, directed), stats
     view, ext_id, global_of_ext, home = _extended_skeleton(dtlp, s, t)
     es, et = ext_id(s), ext_id(t)
     # per-target sidetrack trees are reusable across queries only on the
@@ -397,44 +418,49 @@ def ksp_dg_stepper(
             obs.event("ksp_iteration", s=s, t=t,
                       iteration=stats.iterations, pairs=len(pairs),
                       references=stats.references)
-            seg_lists = yield RefineRequest(pairs=pairs, home=home, k=k,
-                                            stats=stats)
+            seg_lists = yield RefineRequest(pairs=pairs, home=home,
+                                            k=solve_k, stats=stats)
             if isinstance(seg_lists, dict):
                 # out-of-order delivery: per-worker pipelines answer in
                 # completion order, keyed by pair index — realign here
                 seg_lists = [seg_lists[j] for j in range(len(pairs))]
             for idxs in ref_pairs:
-                for d, p in _k_best_joins([seg_lists[j] for j in idxs], k):
+                for d, p in _k_best_joins([seg_lists[j] for j in idxs],
+                                          solve_k):
                     if p not in L_set:
                         L_set.add(p)
                         L.append((d, p))
             L.sort(key=lambda x: (x[0], x[1]))
-            for d_, p_ in L[k:]:
+            for d_, p_ in L[solve_k:]:
                 L_set.discard(p_)
-            L = L[:k]
-        if pending is not None and len(L) >= k:
+            L = L[:solve_k]
+        # the variant policy names the Theorem-3 bound: the weight at or
+        # below which the answer is already decided (L[k-1] for plain
+        # top-k; see core.variants for the bounded/diverse forms)
+        bound = policy.stop_bound(L, k, directed)
+        if pending is not None and bound is not None:
             # sharpened stop rule: only SIMPLE references can ever seed a
             # simple candidate (every join of a repeated-vertex walk is
             # itself non-simple), so the binding Theorem-3 lower bound is
             # the next simple reference's weight, not the next raw
             # walk's.  Skip-and-consume non-simple walks up to that
-            # reference — or until any walk already outweighs L[k-1],
+            # reference — or until any walk already outweighs the bound,
             # which certifies the stop on its own; the reference budget
             # bounds the scan on walk-dense tie plateaus.
             while (pending is not None
                    and stats.references < ref_budget
-                   and pending[0] <= L[k - 1][0] + TIE_EPS):
+                   and pending[0] <= bound + TIE_EPS):
                 ref_path = [global_of_ext[v] for v in pending[1]]
                 if len(set(ref_path)) == len(ref_path):
                     break  # simple: its weight is the sharp bound
                 stats.references += 1
                 stats.walks_skipped += 1
                 pending = next(refs, None)
-            if pending is None or L[k - 1][0] <= pending[0] + TIE_EPS:
+            if pending is None or policy.stop_at(bound, pending[0]):
                 break
     else:
         stats.truncated = pending is not None
-    return L, stats
+    return policy.finalize(L, k, stats, directed), stats
 
 
 def ksp_dg(
@@ -450,6 +476,7 @@ def ksp_dg(
     return_stats: bool = False,
     ref_stream=None,
     tie_batch: int | None = None,
+    variant=None,
 ):
     """KSP-DG (Algorithm 1).  Returns [(dist, path)] ascending, len ≤ k.
 
@@ -467,7 +494,8 @@ def ksp_dg(
     stream (see :mod:`repro.core.refstream`).
     """
     stepper = ksp_dg_stepper(dtlp, s, t, k, max_iterations=max_iterations,
-                             ref_stream=ref_stream, tie_batch=tie_batch)
+                             ref_stream=ref_stream, tie_batch=tie_batch,
+                             variant=variant)
     seg_lists = None
     while True:
         try:
@@ -476,10 +504,11 @@ def ksp_dg(
             L, stats = fin.value
             return (L, stats) if return_stats else L
         if refine_fn is not None:
-            seg_lists = refine_fn(req.pairs, k, req.home)
+            seg_lists = refine_fn(req.pairs, req.k, req.home)
             req.stats.refine_tasks += len(req.pairs)
         else:
             seg_lists = [
-                _partial_ksps(dtlp, a, b, k, partial_mode, cache, req.stats, req.home)
+                _partial_ksps(dtlp, a, b, req.k, partial_mode, cache,
+                              req.stats, req.home)
                 for a, b in req.pairs
             ]

@@ -84,11 +84,18 @@ class TreeCache:
 
         self.data: "OrderedDict[int, SidetrackTree]" = OrderedDict()
         self.max_trees = int(max_trees)
+        # lifetime lookup counters: the one-to-many fanout's tree-sharing
+        # claim is testable as "N targets, N−1 hits on one entry"
+        self.hits = 0
+        self.misses = 0
 
     def get(self, key):
         hit = self.data.get(key)
         if hit is not None:
             self.data.move_to_end(key)
+            self.hits += 1
+        else:
+            self.misses += 1
         return hit
 
     def put(self, key, tree) -> None:

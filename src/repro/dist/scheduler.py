@@ -121,6 +121,12 @@ class QueryTicket:
     s: int
     t: int
     k: int
+    # optional core.variants.VariantPolicy bending the stepper to a
+    # different workload (diverse / bounded); None = plain top-k.  The
+    # policy only changes the stepper's stop rule and pool depth — its
+    # refine tasks still dedup/batch through the shared pipes, keyed by
+    # the RefineRequest's solve_k
+    variant: object = None
     arrival: float = 0.0  # scheduler clock at submit
     admitted_at: float | None = None
     finished_at: float | None = None
@@ -136,6 +142,7 @@ class QueryTicket:
 
     @property
     def done(self) -> bool:
+        """The query finished: its stop rule fired and ``result`` is set."""
         return self.finished_at is not None
 
     @property
@@ -205,6 +212,7 @@ class _WorkerPipe:
 
     @property
     def depth(self) -> int:
+        """Batches this pipe holds: queued backlog + dispatched in-flight."""
         return len(self.backlog) + len(self.inflight)
 
 
@@ -324,7 +332,8 @@ class QueryScheduler:
 
     # ----------------------------------------------------------- admission
     def submit(self, s: int, t: int, k: int, *,
-               arrival: float | None = None) -> QueryTicket:
+               arrival: float | None = None,
+               variant=None) -> QueryTicket:
         """Enqueue one query; raises :class:`QueueFull` past capacity.
 
         Capacity counts the free in-flight slots the next tick will
@@ -333,7 +342,9 @@ class QueryScheduler:
 
         ``arrival`` back-dates the ticket's arrival clock for queries
         that arrived while a tick was running (``run`` passes the trace
-        time); default is the current scheduler clock.
+        time); default is the current scheduler clock.  ``variant`` is
+        an optional :class:`repro.core.variants.VariantPolicy` carried
+        to the query's stepper (None = plain top-k).
         """
         if self.max_queue is not None:
             free = max(0, self.max_in_flight - len(self.active))
@@ -345,6 +356,7 @@ class QueryScheduler:
                 )
         ticket = QueryTicket(
             qid=next(self._qid), s=int(s), t=int(t), k=int(k),
+            variant=variant,
             arrival=self.clock if arrival is None else float(arrival),
             _t_wall=obs.clock(),
         )
@@ -368,6 +380,7 @@ class QueryScheduler:
                 self.cluster.dtlp, tk.s, tk.t, tk.k,
                 max_iterations=self.max_iterations,
                 ref_stream=self.ref_stream,
+                variant=tk.variant,
             )
             self.stats.admitted += 1
             self._advance(tk, None)  # prime to the first RefineRequest

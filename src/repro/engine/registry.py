@@ -89,6 +89,7 @@ class EngineSpec:
 
     @property
     def supports_mesh(self) -> bool:
+        """Whether the spec carries device-mesh (``shard_map``) wiring."""
         return self.make_mesh_solver is not None
 
 
@@ -107,7 +108,13 @@ def register_engine(spec: EngineSpec, *, overwrite: bool = False) -> EngineSpec:
 
 
 def get_engine(name) -> EngineSpec:
-    """Resolve an engine name (or pass an :class:`EngineSpec` through)."""
+    """Resolve an engine name (or pass an :class:`EngineSpec` through).
+
+    >>> get_engine("pyen").name
+    'pyen'
+    >>> get_engine("dense_bf").supports_mesh
+    True
+    """
     if isinstance(name, EngineSpec):
         return name
     spec = _REGISTRY.get(name)
@@ -119,6 +126,11 @@ def get_engine(name) -> EngineSpec:
 
 
 def available_engines() -> list[str]:
+    """Sorted names of every registered engine.
+
+    >>> set(available_engines()) >= {"pyen", "dense_bf", "pallas_bf"}
+    True
+    """
     return sorted(_REGISTRY)
 
 
@@ -202,6 +214,13 @@ def _grouped_refine(worker, misses, k, epoch):
 
 
 def mesh_axis_names(mesh_axis) -> list:
+    """Normalize a mesh-axis spec (one name or a sequence) to a list.
+
+    >>> mesh_axis_names("data")
+    ['data']
+    >>> mesh_axis_names(("data", "model"))
+    ['data', 'model']
+    """
     return [mesh_axis] if isinstance(mesh_axis, str) else list(mesh_axis)
 
 

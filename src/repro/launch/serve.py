@@ -21,7 +21,11 @@ import numpy as np
 
 from repro.data.roadnet import WeightUpdateStream, grid_road_network
 from repro.service import (
+    VARIANTS,
+    BoundedKSPRequest,
+    DiverseKSPRequest,
     KSPService,
+    OneToManyRequest,
     QueryRequest,
     ServiceConfig,
     UpdateBatch,
@@ -72,6 +76,32 @@ def main():
         "JAX_COORDINATOR_ADDRESS + REPRO_NUM_PROCESSES/REPRO_PROCESS_ID, "
         "or platform auto-detection); single-process multi-device needs "
         "only XLA_FLAGS=--xla_force_host_platform_device_count=N",
+    )
+    ap.add_argument(
+        "--variant", choices=VARIANTS, default="ksp",
+        help="query workload: ksp (plain top-k), diverse (k mutually "
+        "dissimilar paths; --min-dist/--cost-add), bounded (every path "
+        "within --stretch of the shortest, at most k), one_to_many (one "
+        "source to --targets targets; all variants share the same "
+        "scheduler and grouped solves — see docs/workloads.md)",
+    )
+    ap.add_argument(
+        "--stretch", type=float, default=1.2,
+        help="bounded: answer = all paths with d ≤ stretch × d₀ (≥ 1)",
+    )
+    ap.add_argument(
+        "--min-dist", type=float, default=0.3,
+        help="diverse: required pairwise dissimilarity in (0, 1] — any "
+        "two answers share at most 1−min_dist of their edges",
+    )
+    ap.add_argument(
+        "--cost-add", type=float, default=None,
+        help="diverse: optional detour cap — no answer costs more than "
+        "(1+cost_add) × d₀",
+    )
+    ap.add_argument(
+        "--targets", type=int, default=3,
+        help="one_to_many: number of random targets per query",
     )
     ap.add_argument(
         "--concurrency", type=int, default=8,
@@ -193,6 +223,22 @@ def main():
     rng = np.random.default_rng(2)
     deadline = args.deadline_ms if args.deadline_ms > 0 else None
 
+    def make_request(rng):
+        if args.variant == "one_to_many":
+            picks = rng.choice(g.n, size=args.targets + 1, replace=False)
+            return OneToManyRequest(
+                int(picks[0]), targets=tuple(map(int, picks[1:])),
+                k=args.k, deadline_ms=deadline)
+        s, t = map(int, rng.choice(g.n, size=2, replace=False))
+        if args.variant == "diverse":
+            return DiverseKSPRequest(s, t, k=args.k, min_dist=args.min_dist,
+                                     cost_add=args.cost_add,
+                                     deadline_ms=deadline)
+        if args.variant == "bounded":
+            return BoundedKSPRequest(s, t, k=args.k, stretch=args.stretch,
+                                     deadline_ms=deadline)
+        return QueryRequest(s, t, k=args.k, deadline_ms=deadline)
+
     total_empty = 0
     for epoch_i in range(args.epochs):
         if args.kill is not None and epoch_i == 1:
@@ -202,11 +248,7 @@ def main():
             svc.revive(args.kill)
             print(f"-- revived worker {args.kill}; it re-syncs missed "
                   f"update batches before serving --")
-        reqs = [
-            QueryRequest(*map(int, rng.choice(g.n, size=2, replace=False)),
-                         k=args.k, deadline_ms=deadline)
-            for _ in range(args.queries)
-        ]
+        reqs = [make_request(rng) for _ in range(args.queries)]
         gaps = rng.exponential(1.0 / args.arrival_rate, size=args.queries)
         arrivals = svc.scheduler.clock + np.cumsum(gaps)
         # per-epoch reporting: delta the counters, reset the gauges

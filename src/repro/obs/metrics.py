@@ -75,7 +75,13 @@ def jsonable(obj):
 
 
 class Counter:
-    """A monotone count.  ``inc`` to bump, ``merge`` to aggregate."""
+    """A monotone count.  ``inc`` to bump, ``merge`` to aggregate.
+
+    >>> c = Counter("served")
+    >>> c.inc(); c.inc(2)
+    >>> c.value
+    3
+    """
 
     __slots__ = ("name", "value")
 
@@ -94,7 +100,13 @@ class Counter:
 
 
 class Gauge:
-    """A point-in-time value; ``peak`` tracks the run maximum."""
+    """A point-in-time value; ``peak`` tracks the run maximum.
+
+    >>> g = Gauge("queue_depth")
+    >>> g.set(4.0); g.set(2.0)
+    >>> (g.value, g.peak)
+    (2.0, 4.0)
+    """
 
     __slots__ = ("name", "value", "peak")
 
@@ -125,6 +137,11 @@ class Histogram:
     bucket past the last edge.  Two histograms over the SAME bounds
     merge by adding counts — the property that lets per-worker
     histograms aggregate into a fleet histogram without resampling.
+
+    >>> h = Histogram("lat_ms", bounds=(1.0, 10.0, 100.0))
+    >>> for v in (0.2, 3.0, 250.0): h.observe(v)
+    >>> (h.count, h.percentile(50))
+    (3, 10.0)
     """
 
     __slots__ = ("name", "bounds", "counts", "count", "total", "vmin",
@@ -238,24 +255,30 @@ class MetricsRegistry:
         return m
 
     def counter(self, name: str) -> Counter:
+        """Get-or-create the named :class:`Counter`."""
         return self._get("counter", name)
 
     def gauge(self, name: str) -> Gauge:
+        """Get-or-create the named :class:`Gauge`."""
         return self._get("gauge", name)
 
     def histogram(self, name: str, bounds=LATENCY_MS_BUCKETS) -> Histogram:
+        """Get-or-create the named :class:`Histogram` over ``bounds``."""
         return self._get("histogram", name, bounds)
 
     def provider(self, name: str, fn) -> None:
+        """Register a callable whose result embeds in ``snapshot()``."""
         self._providers[name] = fn
 
     def merge(self, other: "MetricsRegistry") -> None:
+        """Fold another registry in: same-name metrics merge pairwise."""
         for name, m in other._metrics.items():
             kind = other._kinds[name]
             args = (m.bounds,) if kind == "histogram" else ()
             self._get(kind, name, *args).merge(m)
 
     def snapshot(self) -> dict:
+        """One JSON-able dict: provider sections plus every metric."""
         out = {name: jsonable(fn()) for name, fn in self._providers.items()}
         out["metrics"] = {
             name: jsonable(m.snapshot())

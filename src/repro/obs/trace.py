@@ -62,6 +62,7 @@ class Collector:
 
     def record(self, kind: str, name: str, ts: float, dur: float,
                tid: int, attrs: dict) -> None:
+        """Append one record to the trace (if on) and the flight ring."""
         rec = Record(kind, name, ts, dur, tid, attrs)
         if self.trace:
             self.events.append(rec)

@@ -1,10 +1,11 @@
 """repro.service — the one typed serving API.
 
 Public surface of the serving stack: :class:`KSPService` (submit/poll/
-drain over the cross-query lockstep scheduler, epoch-versioned queries
-and updates, SLO admission), the request/response dataclasses, and the
-:class:`~repro.engine.registry.EngineSpec` registry for pluggable refine
-engines — each spec carrying a
+drain over the pipelined cross-query scheduler, epoch-versioned queries
+and updates, SLO admission), the request/response dataclasses — four
+query variants, one scheduler path (see ``docs/workloads.md``) — and
+the :class:`~repro.engine.registry.EngineSpec` registry for pluggable
+refine engines, each spec carrying a
 :class:`~repro.engine.backend.SolverBackend` (jnp or Pallas) whose
 :class:`~repro.engine.layout.SlabLayout` owns all slab geometry.
 Everything underneath — ``dist.cluster.Cluster.query``,
@@ -15,6 +16,15 @@ Everything underneath — ``dist.cluster.Cluster.query``,
     svc = KSPService.build(graph, ServiceConfig(engine="dense_bf",
                                                 n_workers=8))
     res = svc.query(s, t, k=3)       # res.paths, res.epoch, res.stats
+
+Variant requests go through the same ``submit``/``query`` door:
+
+    from repro.service import (BoundedKSPRequest, DiverseKSPRequest,
+                               OneToManyRequest)
+
+    svc.submit(DiverseKSPRequest(s, t, k=3, min_dist=0.4))
+    svc.submit(BoundedKSPRequest(s, t, k=16, stretch=1.3))
+    svc.submit(OneToManyRequest(s, targets=(a, b, c), k=2))
 """
 
 from repro.engine.backend import (  # noqa: F401
@@ -38,9 +48,13 @@ from repro.engine.registry import (  # noqa: F401
 
 from .service import KSPService  # noqa: F401
 from .types import (  # noqa: F401
+    VARIANTS,
     AdmissionError,
+    BoundedKSPRequest,
     DeadlineExceeded,
+    DiverseKSPRequest,
     EpochUnsatisfiable,
+    OneToManyRequest,
     QueryRequest,
     QueryResult,
     QueueRejected,
@@ -52,7 +66,11 @@ from .types import (  # noqa: F401
 
 __all__ = [
     "KSPService",
+    "VARIANTS",
     "QueryRequest",
+    "DiverseKSPRequest",
+    "BoundedKSPRequest",
+    "OneToManyRequest",
     "QueryResult",
     "UpdateBatch",
     "ServiceConfig",

@@ -44,6 +44,8 @@ import numpy as np
 from repro import obs
 from repro.core.dtlp import DTLP
 from repro.core.graph import dedupe_updates
+from repro.core.kspdg import QueryStats
+from repro.core.variants import make_variant
 from repro.dist.cluster import Cluster
 from repro.dist.scheduler import QueryScheduler, QueueFull, drive_trace
 
@@ -59,6 +61,66 @@ from .types import (
     ServiceTicket,
     UpdateBatch,
 )
+
+
+class _Fanout:
+    """Accumulator for one one_to_many request's per-target sub-queries.
+
+    ``absorb`` collects finished scheduler tickets by target index;
+    ``assemble`` builds the single :class:`QueryResult` once all are in:
+    ``by_target`` in request order (paths un-reversed when the fanout
+    submitted swapped target→source queries), ``paths`` merged weight-
+    ascending, epoch = the oldest sub-query's (the conservative
+    freshness claim), latency = the slowest sub-query's, stats = the
+    field-wise aggregate (counters summed, flags OR-ed).
+    """
+
+    __slots__ = ("ticket", "targets", "rev", "parts", "missing")
+
+    def __init__(self, ticket: ServiceTicket, targets, rev: bool):
+        self.ticket = ticket
+        self.targets = tuple(targets)
+        self.rev = bool(rev)
+        self.parts: dict = {}  # target index → finished scheduler ticket
+        self.missing = len(self.targets)
+
+    def absorb(self, idx: int, tk) -> bool:
+        """Store one finished sub-query; True once every target answered."""
+        self.parts[idx] = tk
+        self.missing -= 1
+        return self.missing == 0
+
+    def assemble(self) -> QueryResult:
+        """Merge the per-target sub-results into one ``QueryResult``."""
+        by_target = []
+        merged = []
+        agg = QueryStats()
+        int_fields = [f.name for f in dataclasses.fields(QueryStats)
+                      if f.type == "int"]
+        epoch = None
+        latency = 0.0
+        for idx in range(len(self.targets)):
+            tk = self.parts[idx]
+            paths = [(d, tuple(reversed(p))) for d, p in tk.result] \
+                if self.rev else list(tk.result)
+            by_target.append(tuple(paths))
+            merged.extend(paths)
+            epoch = tk.epoch if epoch is None else min(epoch, tk.epoch)
+            latency = max(latency, tk.latency or 0.0)
+            for name in int_fields:
+                setattr(agg, name,
+                        getattr(agg, name) + getattr(tk.stats, name))
+            agg.truncated |= tk.stats.truncated
+            agg.bound_clipped |= tk.stats.bound_clipped
+        merged.sort(key=lambda x: (x[0], x[1]))
+        return QueryResult(
+            qid=self.ticket.qid,
+            paths=tuple(merged),
+            epoch=int(epoch),
+            stats=agg,
+            latency_ms=float(latency) * 1e3,
+            by_target=tuple(by_target),
+        )
 
 
 class KSPService:
@@ -273,6 +335,7 @@ class KSPService:
 
     @property
     def reissues(self) -> int:
+        """Tasks re-routed to a replica after their primary died."""
         return self.cluster.reissues
 
     def predicted_wait_ms(self) -> float:
@@ -342,16 +405,57 @@ class KSPService:
         return ticket
 
     def _enqueue(self, ticket: ServiceTicket) -> None:
+        req = ticket.request
+        if req.variant == "one_to_many":
+            self._enqueue_fanout(ticket)
+            return
+        policy = make_variant(req.variant, stretch=req.stretch,
+                              min_dist=req.min_dist, cost_add=req.cost_add,
+                              pool=req.pool)
         try:
             tk = self.scheduler.submit(
-                ticket.request.s, ticket.request.t, ticket.request.k,
-                arrival=ticket.arrival,
+                req.s, req.t, req.k,
+                arrival=ticket.arrival, variant=policy,
             )
         except QueueFull as e:
             self.stats.rejected_queue += 1
             raise QueueRejected(str(e)) from e
         ticket._ticket = tk
         self._by_sqid[tk.qid] = ticket
+
+    def _enqueue_fanout(self, ticket: ServiceTicket) -> None:
+        """Fan a one_to_many request into per-target scheduler queries.
+
+        The sub-queries run CONCURRENTLY through the shared pipes, so
+        their refine tasks de-duplicate against each other (targets near
+        each other mostly cross the same boundary pairs) and against
+        every other in-flight query.  On undirected graphs each
+        sub-query is submitted target→source: the reference stream's
+        per-target sidetrack tree is keyed by the search target, so the
+        swapped orientation gives all sub-queries ONE shared
+        ``ref_tree_cache`` entry (the source's reverse SPT) instead of
+        one tree per target; paths are un-reversed at assembly.
+        Directed graphs skip the swap — task-level dedup still applies.
+        """
+        req = ticket.request
+        rev = not self.dtlp.graph.directed
+        fan = _Fanout(ticket, req.targets, rev)
+        added = []
+        try:
+            for idx, tgt in enumerate(req.targets):
+                s, t = (tgt, req.s) if rev else (req.s, tgt)
+                tk = self.scheduler.submit(s, t, req.k,
+                                           arrival=ticket.arrival)
+                self._by_sqid[tk.qid] = (fan, idx)
+                added.append(tk.qid)
+        except QueueFull as e:
+            # partial fanout: orphan the already-submitted sub-queries
+            # (their completions no-op against _by_sqid) and reject
+            for qid in added:
+                self._by_sqid.pop(qid, None)
+            self.stats.rejected_queue += 1
+            raise QueueRejected(str(e)) from e
+        ticket._ticket = fan
 
     def update(self, batch: UpdateBatch, *, wait: bool = True) -> int:
         """Queue a weight-update batch for the configured update mode.
@@ -400,16 +504,26 @@ class KSPService:
         self._release_held()
         out = []
         for tk in self.scheduler.tick():
-            ticket = self._by_sqid.pop(tk.qid, None)
-            if ticket is None:
+            entry = self._by_sqid.pop(tk.qid, None)
+            if entry is None:
                 continue  # raw-scheduler submission, not ours
-            ticket.result = QueryResult(
-                qid=ticket.qid,
-                paths=tuple(tk.result),
-                epoch=int(tk.epoch),
-                stats=tk.stats,
-                latency_ms=float(tk.latency or 0.0) * 1e3,
-            )
+            if isinstance(entry, tuple):
+                # one_to_many sub-query: fold into its fanout, resolve
+                # the service ticket only when every target is answered
+                fan, idx = entry
+                if not fan.absorb(idx, tk):
+                    continue
+                ticket = fan.ticket
+                ticket.result = fan.assemble()
+            else:
+                ticket = entry
+                ticket.result = QueryResult(
+                    qid=ticket.qid,
+                    paths=tuple(tk.result),
+                    epoch=int(tk.epoch),
+                    stats=tk.stats,
+                    latency_ms=float(tk.latency or 0.0) * 1e3,
+                )
             self._lat_hist.observe(ticket.result.latency_ms)
             self.stats.completed += 1
             out.append(ticket)

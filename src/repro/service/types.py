@@ -17,6 +17,9 @@ import numpy as np
 
 __all__ = [
     "QueryRequest",
+    "DiverseKSPRequest",
+    "BoundedKSPRequest",
+    "OneToManyRequest",
     "QueryResult",
     "UpdateBatch",
     "ServiceConfig",
@@ -27,6 +30,10 @@ __all__ = [
     "QueueRejected",
     "EpochUnsatisfiable",
 ]
+
+#: the request kinds KSPService serves; every one flows through the same
+#: scheduler/grouped-solve path (see docs/workloads.md)
+VARIANTS = ("ksp", "diverse", "bounded", "one_to_many")
 
 
 class AdmissionError(RuntimeError):
@@ -56,7 +63,7 @@ class EpochUnsatisfiable(AdmissionError):
 
 @dataclasses.dataclass(frozen=True)
 class QueryRequest:
-    """One KSP query: k shortest s→t paths.
+    """One KSP query: k shortest s→t paths (or a variant of the shape).
 
     ``deadline_ms`` opts into SLO admission: the service rejects
     (:class:`DeadlineExceeded`) when the predicted queue delay — tick
@@ -64,6 +71,21 @@ class QueryRequest:
     accepting work it cannot serve in time.  ``min_epoch`` demands
     freshness: the query holds until the graph epoch reaches it (or is
     rejected outright when no queued update can get there).
+
+    ``variant`` selects the workload — ``"ksp"`` (plain top-k, the
+    default), ``"diverse"`` (k mutually dissimilar paths; tuned by
+    ``min_dist``/``cost_add``/``pool``), ``"bounded"`` (every path
+    within ``stretch`` × the shortest, budget-guarded by ``k``), or
+    ``"one_to_many"`` (one source, the ``targets`` set; ``t`` is
+    unused).  The typed subclasses below pin the variant and its
+    defaults; construct whichever reads best:
+
+        >>> QueryRequest(0, 9, k=4).variant
+        'ksp'
+        >>> BoundedKSPRequest(0, 9, stretch=1.5).variant
+        'bounded'
+        >>> OneToManyRequest(0, targets=(3, 7, 9)).targets
+        (3, 7, 9)
     """
 
     s: int
@@ -71,12 +93,89 @@ class QueryRequest:
     k: int = 3
     deadline_ms: float | None = None
     min_epoch: int | None = None
+    variant: str = "ksp"
+    # bounded: answer = all paths with d ≤ stretch × d₀ (≥ 1)
+    stretch: float | None = None
+    # diverse: required pairwise dissimilarity (edge-overlap ≤ 1−min_dist),
+    # optional detour cost cap (1+cost_add)×d₀, candidate-pool override
+    min_dist: float | None = None
+    cost_add: float | None = None
+    pool: int | None = None
+    # one_to_many: the target set (``t`` is ignored for this variant)
+    targets: tuple | None = None
 
     def __post_init__(self):
         if self.k < 1:
             raise ValueError(f"k must be ≥ 1, got {self.k}")
         if self.deadline_ms is not None and self.deadline_ms <= 0:
             raise ValueError("deadline_ms must be positive")
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; one of {VARIANTS}"
+            )
+        if self.stretch is not None:
+            if self.variant != "bounded":
+                raise ValueError("stretch is a bounded-variant field")
+            if self.stretch < 1.0:
+                raise ValueError(f"stretch must be ≥ 1, got {self.stretch}")
+        for name in ("min_dist", "cost_add", "pool"):
+            if getattr(self, name) is not None and self.variant != "diverse":
+                raise ValueError(f"{name} is a diverse-variant field")
+        if self.min_dist is not None and not 0.0 < self.min_dist <= 1.0:
+            raise ValueError(f"min_dist must be in (0, 1], got {self.min_dist}")
+        if self.cost_add is not None and self.cost_add < 0:
+            raise ValueError(f"cost_add must be ≥ 0, got {self.cost_add}")
+        if self.pool is not None and self.pool < 1:
+            raise ValueError(f"pool must be ≥ 1, got {self.pool}")
+        if self.variant == "one_to_many":
+            if not self.targets:
+                raise ValueError("one_to_many requires a non-empty targets")
+            object.__setattr__(
+                self, "targets", tuple(int(t) for t in self.targets))
+        elif self.targets is not None:
+            raise ValueError("targets is a one_to_many-variant field")
+
+
+@dataclasses.dataclass(frozen=True)
+class DiverseKSPRequest(QueryRequest):
+    """k mutually dissimilar s→t paths (``variant="diverse"`` pinned).
+
+    ``min_dist`` is the required pairwise dissimilarity: any two
+    returned paths share at most ``1 − min_dist`` of their edges
+    (fraction of the shorter path).  ``cost_add`` optionally caps the
+    detour: no returned path costs more than ``(1 + cost_add) × d₀``.
+    """
+
+    variant: str = "diverse"
+    min_dist: float = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundedKSPRequest(QueryRequest):
+    """Every s→t path within ``stretch`` × the shortest distance
+    (``variant="bounded"`` pinned); ``k`` bounds the answer size —
+    ``QueryResult.stats.bound_clipped`` reports when it bit."""
+
+    variant: str = "bounded"
+    stretch: float = 1.2
+
+
+@dataclasses.dataclass(frozen=True)
+class OneToManyRequest(QueryRequest):
+    """k shortest paths from one source to EACH of ``targets``
+    (``variant="one_to_many"`` pinned; ``t`` is unused).
+
+    The service fans the request into per-target sub-queries that run
+    concurrently through the shared scheduler — their refine tasks
+    de-duplicate into the same grouped solves, and on undirected graphs
+    every sub-query is oriented target→source so all of them hit ONE
+    reverse-SPT ``ref_tree_cache`` entry.  The result's ``by_target``
+    holds one path list per target, in request order; ``paths`` is the
+    merged weight-ascending view.
+    """
+
+    t: int = -1
+    variant: str = "one_to_many"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,10 +195,21 @@ class QueryResult:
     epoch: int
     stats: Any
     latency_ms: float
+    # one_to_many only: one ``((dist, path), ...)`` tuple per requested
+    # target, in request order; None for the point-to-point variants.
+    # ``paths`` then holds the merged weight-ascending view and ``stats``
+    # the per-sub-query aggregate (epoch = oldest sub-query's epoch,
+    # latency = the slowest sub-query's)
+    by_target: Any = None
 
     @property
     def truncated(self) -> bool:
         return bool(self.stats.truncated)
+
+    @property
+    def bound_clipped(self) -> bool:
+        """Bounded variant: the stretch window held more paths than k."""
+        return bool(getattr(self.stats, "bound_clipped", False))
 
 
 @dataclasses.dataclass(frozen=True)

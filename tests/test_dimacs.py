@@ -1,0 +1,93 @@
+"""data/dimacs.py: the DIMACS .gr loader, on an in-repo miniature
+fixture — duplicate-arc collapse, weight floor, self-loop removal,
+gzip, max_edges truncation, and the find_dimacs miss/hit paths."""
+
+import gzip
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.sssp import dijkstra, graph_view
+from repro.data.dimacs import find_dimacs, load_gr
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "mini.gr")
+
+
+def edge_set(g):
+    return {
+        (int(u), int(v)): float(w)
+        for u, v, w in zip(g.edge_u, g.edge_v, g.w)
+    }
+
+
+def test_load_gr_undirected():
+    g = load_gr(FIXTURE)
+    assert not g.directed
+    assert g.n == 6
+    edges = edge_set(g)
+    # 10 arcs → 5 logical edges: dups collapsed, self-loop dropped
+    assert len(edges) == 5
+    assert edges[(0, 1)] == 4.0
+    # duplicate (2,3)/(3,2) arcs with weights 2 and 3: min wins
+    assert edges[(1, 2)] == 2.0
+    assert edges[(0, 3)] == 1.0
+    assert edges[(2, 5)] == 7.0
+    # zero travel time floored to the loader's minimum
+    assert edges[(4, 5)] == pytest.approx(1e-3)
+    # self-loop (4,4) removed
+    assert all(u != v for u, v in edges)
+
+
+def test_load_gr_directed():
+    g = load_gr(FIXTURE, undirected=False)
+    assert g.directed
+    # all 10 arcs minus the self-loop survive, unmerged
+    assert g.m == 9
+
+
+def test_load_gr_shortest_path_sanity():
+    g = load_gr(FIXTURE)
+    dist, _, _ = dijkstra(graph_view(g), 0)
+    # 0→5 goes 0-1 (4) + 1-2 (2, min of the dup pair) + 2-5 (7)
+    assert dist[5] == pytest.approx(13.0)
+
+
+def test_load_gr_gzip(tmp_path):
+    gz = tmp_path / "mini.gr.gz"
+    with open(FIXTURE, "rb") as f:
+        gz.write_bytes(gzip.compress(f.read()))
+    a = load_gr(FIXTURE)
+    b = load_gr(str(gz))
+    assert a.n == b.n and a.m == b.m
+    np.testing.assert_array_equal(a.edge_u, b.edge_u)
+    np.testing.assert_array_equal(a.edge_v, b.edge_v)
+    np.testing.assert_array_equal(a.w, b.w)
+
+
+def test_load_gr_max_edges():
+    # stops reading after 3 arcs: (1,2), (2,1), (2,3)
+    g = load_gr(FIXTURE, max_edges=3)
+    edges = edge_set(g)
+    assert edges == {(0, 1): 4.0, (1, 2): 2.0}
+
+
+def test_load_gr_no_problem_line(tmp_path):
+    bad = tmp_path / "bad.gr"
+    bad.write_text("c only comments\na 1 2 3\n")
+    with pytest.raises(ValueError, match="no problem line"):
+        load_gr(str(bad))
+
+
+def test_find_dimacs_miss(tmp_path):
+    assert find_dimacs("NY", search=(str(tmp_path),)) is None
+
+
+def test_find_dimacs_hit(tmp_path):
+    p = tmp_path / "USA-road-t.NY.gr"
+    p.write_text("p sp 1 0\n")
+    assert find_dimacs("NY", search=(str(tmp_path),)) == str(p)
+    # .gz fallback when the uncompressed file is absent
+    pz = tmp_path / "USA-road-t.COL.gr.gz"
+    pz.write_bytes(b"")
+    assert find_dimacs("COL", search=(str(tmp_path),)) == str(pz)

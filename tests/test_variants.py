@@ -1,0 +1,393 @@
+"""Query variants on the shared engine: diverse / bounded / one-to-many.
+
+Correctness is pinned the way this repo always pins it — brute-force
+oracles on small graphs (the full simple-path enumeration via core.yen),
+byte-stability across the pipelined and lockstep schedules and across
+barrier/streaming update modes, and a mixed-variant burst proving the
+variants SHARE grouped solves (dedup/dispatch counters) instead of
+forking the stack.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dtlp import DTLP
+from repro.core.kspdg import ksp_dg
+from repro.core.sssp import graph_view
+from repro.core.variants import (
+    BoundedKSP,
+    DiverseKSP,
+    VariantPolicy,
+    greedy_diverse,
+    make_variant,
+    path_edges,
+    path_overlap,
+)
+from repro.core.yen import ksp
+from repro.data.roadnet import grid_road_network
+from repro.service import (
+    BoundedKSPRequest,
+    DiverseKSPRequest,
+    KSPService,
+    OneToManyRequest,
+    QueryRequest,
+    ServiceConfig,
+    UpdateBatch,
+)
+
+
+@pytest.fixture(scope="module")
+def net():
+    g = grid_road_network(6, 6, seed=3)
+    return g, DTLP.build(g, z=8, xi=3)
+
+
+def enumerate_paths(g, s, t, kk=200):
+    """Exhaustive-enough enumeration, canonically ordered: ties at equal
+    weight sort by path tuple, matching the stepper's L ordering."""
+    out = ksp(graph_view(g), s, t, kk, directed=g.directed)
+    return sorted(out, key=lambda x: (x[0], x[1]))
+
+
+def query_pairs(g, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        tuple(map(int, rng.choice(g.n, size=2, replace=False)))
+        for _ in range(n)
+    ]
+
+
+# --------------------------------------------------------------- policies
+
+
+def test_path_overlap_metric():
+    a = path_edges((0, 1, 2, 3))
+    assert path_overlap(a, a) == 1.0
+    assert path_overlap(a, path_edges((0, 5, 6, 3))) == 0.0
+    # containment: a longer path swallowing a shorter one is overlap 1
+    assert path_overlap(a, path_edges((0, 1, 2, 3, 4, 5))) == 1.0
+    # reversal shares all edges on an undirected metric...
+    assert path_overlap(a, path_edges((3, 2, 1, 0))) == 1.0
+    # ...and none on a directed one
+    assert path_overlap(path_edges((0, 1, 2), directed=True),
+                        path_edges((2, 1, 0), directed=True)) == 0.0
+
+
+def test_make_variant():
+    assert make_variant("ksp") is None
+    assert make_variant(None) is None
+    assert make_variant("one_to_many") is None  # subs are plain queries
+    assert isinstance(make_variant("bounded", stretch=1.5), BoundedKSP)
+    assert isinstance(make_variant("diverse", min_dist=0.5), DiverseKSP)
+    with pytest.raises(ValueError):
+        make_variant("knn")
+    with pytest.raises(ValueError):
+        BoundedKSP(stretch=0.5)
+    with pytest.raises(ValueError):
+        DiverseKSP(min_dist=0.0)
+    with pytest.raises(ValueError):
+        DiverseKSP(cost_add=-0.1)
+
+
+def test_plain_policy_is_identity(net):
+    """variant=VariantPolicy() must be byte-identical to no variant."""
+    g, d = net
+    for s, t in query_pairs(g, 6, seed=1):
+        base = ksp_dg(d, s, t, 4, ref_stream="lazy")
+        via_policy = ksp_dg(d, s, t, 4, ref_stream="lazy",
+                            variant=VariantPolicy())
+        assert base == via_policy
+
+
+# ------------------------------------------------------- bounded variant
+
+
+@pytest.mark.parametrize("stream", ["lazy", "yen"])
+def test_bounded_oracle(net, stream):
+    """Every path within stretch×d0 and nothing else, vs brute force."""
+    g, d = net
+    stretch = 1.3
+    for s, t in query_pairs(g, 8, seed=2):
+        got, st = ksp_dg(d, s, t, 12, ref_stream=stream,
+                         variant=BoundedKSP(stretch), return_stats=True)
+        full = enumerate_paths(g, s, t)
+        d0 = full[0][0]
+        want = [(dd, p) for dd, p in full if dd <= stretch * d0 + 1e-9][:12]
+        assert got == want, (s, t)
+        assert not st.truncated
+
+
+def test_bounded_budget_guard(net):
+    """k clips a too-large stretch window and says so via bound_clipped."""
+    g, d = net
+    s, t = query_pairs(g, 1, seed=3)[0]
+    full = enumerate_paths(g, s, t, kk=600)
+    d0 = full[0][0]
+    stretch = 1.7
+    # the oracle must fully cover the window for the comparison to mean
+    # anything: the enumeration's tail must lie beyond the cut
+    assert full[-1][0] > stretch * d0 + 1e-9
+    in_window = [(dd, p) for dd, p in full if dd <= stretch * d0 + 1e-9]
+    assert len(in_window) > 3  # the fixture must make the guard bite
+    small, st_small = ksp_dg(d, s, t, 3, variant=BoundedKSP(stretch),
+                             return_stats=True)
+    assert small == in_window[:3]
+    assert st_small.bound_clipped
+    # a budget big enough for the whole window reports clean
+    big, st_big = ksp_dg(d, s, t, len(in_window) + 5,
+                         variant=BoundedKSP(stretch), return_stats=True)
+    assert big == in_window
+    assert not st_big.bound_clipped
+
+
+# ------------------------------------------------------- diverse variant
+
+
+def test_diverse_oracle(net):
+    """Streaming diverse selection == greedy over the full enumeration."""
+    g, d = net
+    min_dist = 0.4
+    for s, t in query_pairs(g, 8, seed=4):
+        got, st = ksp_dg(d, s, t, 3, ref_stream="lazy",
+                         variant=DiverseKSP(min_dist=min_dist),
+                         return_stats=True)
+        full = enumerate_paths(g, s, t)
+        # oracle over the same pool depth the policy certifies exact
+        pool = DiverseKSP(min_dist=min_dist).solve_k(3)
+        want = greedy_diverse(full[:pool], 3, min_dist,
+                              directed=g.directed)
+        assert got == want, (s, t)
+        # first selected path is always the true shortest
+        assert got[0] == full[0]
+        # pairwise dissimilarity holds
+        edges = [path_edges(p, g.directed) for _, p in got]
+        for i in range(len(edges)):
+            for j in range(i + 1, len(edges)):
+                assert (path_overlap(edges[i], edges[j])
+                        <= 1.0 - min_dist + 1e-9)
+
+
+def test_diverse_cost_cap(net):
+    """cost_add caps the detour at (1+cost_add)×d0."""
+    g, d = net
+    cost_add = 0.25
+    for s, t in query_pairs(g, 6, seed=5):
+        got = ksp_dg(d, s, t, 4, ref_stream="lazy",
+                     variant=DiverseKSP(min_dist=0.3, cost_add=cost_add))
+        d0 = got[0][0]
+        for dd, _ in got:
+            assert dd <= (1 + cost_add) * d0 + 1e-9
+        full = enumerate_paths(g, s, t)
+        pool = DiverseKSP(min_dist=0.3).solve_k(4)
+        want = greedy_diverse(full[:pool], 4, 0.3,
+                              cost_cap=(1 + cost_add) * full[0][0],
+                              directed=g.directed)
+        assert got == want, (s, t)
+
+
+def test_diverse_pool_truncation(net):
+    """An unsatisfiable min_dist exhausts the pool and reports it."""
+    g, d = net
+    s, t = query_pairs(g, 1, seed=6)[0]
+    # min_dist=1.0 demands edge-disjoint paths; ask for many with a tiny
+    # pool so the enumeration can't possibly satisfy it
+    got, st = ksp_dg(d, s, t, 6, ref_stream="lazy",
+                     variant=DiverseKSP(min_dist=1.0, pool=6),
+                     return_stats=True)
+    assert len(got) < 6
+    assert st.truncated
+
+
+# --------------------------------------------------- service integration
+
+
+@pytest.fixture(scope="module")
+def svc_net():
+    g = grid_road_network(8, 8, seed=1)
+    d = DTLP.build(g, z=10, xi=3)
+    return g, d
+
+
+def fresh_service(d, **cfg_kw):
+    cfg = ServiceConfig(engine="pyen", n_workers=2,
+                        straggler_factor=None, **cfg_kw)
+    return KSPService(d, cfg)
+
+
+def test_service_variants_match_core(svc_net):
+    """Each variant through the full service == the core driver."""
+    g, d = svc_net
+    svc = fresh_service(d)
+    for s, t in query_pairs(g, 5, seed=7):
+        want_b = ksp_dg(d, s, t, 10, variant=BoundedKSP(1.25))
+        got_b = svc.submit(BoundedKSPRequest(s, t, k=10, stretch=1.25))
+        want_d = ksp_dg(d, s, t, 3,
+                        variant=DiverseKSP(min_dist=0.4, cost_add=0.5))
+        got_d = svc.submit(DiverseKSPRequest(s, t, k=3, min_dist=0.4,
+                                             cost_add=0.5))
+        svc.drain()
+        assert list(got_b.result.paths) == want_b
+        assert list(got_d.result.paths) == want_d
+        assert got_b.result.epoch == got_d.result.epoch == svc.epoch
+
+
+def test_one_to_many_oracle(svc_net):
+    """Per-target answers == independent plain queries; assembly rules:
+    by_target in request order, merged paths weight-ascending, stats
+    aggregated."""
+    g, d = svc_net
+    svc = fresh_service(d)
+    s = 0
+    targets = (63, 35, 14, 49)
+    tk = svc.submit(OneToManyRequest(s, targets=targets, k=3))
+    svc.drain()
+    res = tk.result
+    assert len(res.by_target) == len(targets)
+    n_paths = 0
+    for tgt, plist in zip(targets, res.by_target):
+        want = ksp_dg(d, s, tgt, 3)
+        assert list(plist) == want, tgt
+        for dd, p in plist:
+            assert p[0] == s and p[-1] == tgt
+            assert abs(g.path_distance(p) - dd) < 1e-8
+        n_paths += len(plist)
+    assert len(res.paths) == n_paths
+    dists = [dd for dd, _ in res.paths]
+    assert dists == sorted(dists)
+    assert res.stats.iterations > 0  # aggregated, not one sub's
+
+
+def test_one_to_many_directed():
+    """Directed graphs skip the reverse-orientation trick but still
+    answer correctly (no swap: forward s→target sub-queries)."""
+    g = grid_road_network(6, 6, seed=9, directed=True)
+    d = DTLP.build(g, z=8, xi=3)
+    svc = fresh_service(d)
+    s = 1
+    targets = (30, 22)
+    tk = svc.submit(OneToManyRequest(s, targets=targets, k=2))
+    svc.drain()
+    for tgt, plist in zip(targets, tk.result.by_target):
+        want = ksp_dg(d, s, tgt, 2)
+        assert list(plist) == want, tgt
+
+
+def test_one_to_many_shares_reference_tree():
+    """Undirected fanout orientation: all sub-queries search toward the
+    SAME target (the source), so one ref_tree_cache entry serves every
+    target — N targets cost 1 tree build, not N."""
+    g = grid_road_network(8, 8, seed=1)
+    d = DTLP.build(g, z=10, xi=3)
+    # boundary-vertex endpoints only: the tree cache engages when no
+    # endpoint needs splicing (kspdg uses it iff `not home`)
+    boundary = [int(v) for v in np.nonzero(d.skeleton.g2s >= 0)[0]]
+    s, targets = boundary[0], tuple(boundary[1:5])
+    svc = fresh_service(d)
+    cache = d.ref_tree_cache()
+    h0, m0 = cache.hits, cache.misses
+    tk = svc.submit(OneToManyRequest(s, targets=targets, k=2))
+    svc.drain()
+    assert tk.result.by_target  # served
+    assert cache.misses - m0 == 1  # one tree built (rooted at s)...
+    assert cache.hits - h0 >= len(targets) - 1  # ...shared by the rest
+
+
+def test_mixed_variant_burst_shares_solves(svc_net):
+    """The tentpole's architectural claim: a mixed burst of all four
+    variants dedups refine tasks ACROSS variants — total dispatched
+    tasks strictly under the sum of per-variant isolated runs."""
+    g, d = svc_net
+    s, t = 2, 61
+    k = 8  # plain and one_to_many share solve_k=8; bounded runs at
+    # k+1=9 (lookahead slot), so give diverse pool=9 to share with it
+    reqs = [
+        QueryRequest(s, t, k=k),
+        BoundedKSPRequest(s, t, k=k, stretch=1.3),
+        DiverseKSPRequest(s, t, k=2, min_dist=0.4, pool=k + 1),
+        OneToManyRequest(s, targets=(t, 53), k=k),
+    ]
+
+    def dispatched(requests):
+        svc = fresh_service(d)
+        tks = [svc.submit(r) for r in requests]
+        svc.drain()
+        assert all(tk.result is not None for tk in tks)
+        return (svc.scheduler.stats.tasks_dispatched,
+                svc.scheduler.stats.tasks_deduped)
+
+    solo = sum(dispatched([r])[0] for r in reqs)
+    together, deduped = dispatched(reqs)
+    assert deduped > 0
+    assert together < solo
+
+
+@pytest.mark.parametrize("variant_reqs", [
+    [QueryRequest(5, 58, k=4)],
+    [BoundedKSPRequest(5, 58, k=10, stretch=1.3)],
+    [DiverseKSPRequest(5, 58, k=3, min_dist=0.4)],
+    [OneToManyRequest(5, targets=(58, 33, 12), k=2)],
+    [QueryRequest(5, 58, k=4), BoundedKSPRequest(12, 40, k=8, stretch=1.2),
+     DiverseKSPRequest(3, 60, k=3, min_dist=0.3),
+     OneToManyRequest(7, targets=(44, 61), k=3)],
+])
+def test_pipeline_byte_stability(svc_net, variant_reqs):
+    """Pipelined and lockstep schedules answer identically per variant."""
+    g, d = svc_net
+
+    def serve(pipeline):
+        svc = fresh_service(d, pipeline=pipeline)
+        tks = [svc.submit(r) for r in variant_reqs]
+        svc.drain()
+        return [(tk.result.paths, tk.result.by_target) for tk in tks]
+
+    assert serve(True) == serve(False)
+
+
+@pytest.mark.parametrize("mode", ["barrier", "streaming"])
+def test_update_mode_byte_stability(svc_net, mode):
+    """Variant answers are identical across update modes at matched
+    epochs: burst at epoch 0, update, burst at epoch 1."""
+    g, d = svc_net
+    rng = np.random.default_rng(11)
+    eids = rng.choice(g.m, size=12, replace=False)
+    new_w = np.asarray(g.w[eids] * 2.5, dtype=np.float64)
+    reqs = [
+        BoundedKSPRequest(5, 58, k=8, stretch=1.3),
+        DiverseKSPRequest(12, 40, k=3, min_dist=0.4),
+        OneToManyRequest(3, targets=(60, 33), k=2),
+    ]
+
+    def serve(update_mode):
+        # rebuild graph AND index per run: updates mutate both in place
+        gg = grid_road_network(8, 8, seed=1)
+        dd = DTLP.build(gg, z=10, xi=3)
+        svc = fresh_service(dd, update_mode=update_mode)
+        out = []
+        t0 = [svc.submit(r) for r in reqs]
+        svc.drain()
+        svc.update(UpdateBatch(eids, new_w))
+        t1 = [svc.submit(r) for r in reqs]
+        svc.drain()
+        for tk in t0 + t1:
+            out.append((tk.result.epoch, tk.result.paths,
+                        tk.result.by_target))
+        return out
+
+    got = serve(mode)
+    ref = serve("barrier")
+    assert got == ref
+
+
+def test_variant_requests_validate():
+    with pytest.raises(ValueError):
+        QueryRequest(0, 1, variant="knn")
+    with pytest.raises(ValueError):
+        QueryRequest(0, 1, min_dist=0.5)  # diverse-only field
+    with pytest.raises(ValueError):
+        BoundedKSPRequest(0, 1, stretch=0.9)
+    with pytest.raises(ValueError):
+        DiverseKSPRequest(0, 1, min_dist=1.5)
+    with pytest.raises(ValueError):
+        OneToManyRequest(0, targets=None)
+    with pytest.raises(ValueError):
+        QueryRequest(0, 1, targets=(2, 3))  # one_to_many-only field
